@@ -1,0 +1,91 @@
+"""Kernel microbenchmarks: the paper's metrics applied to the TPU mapping.
+
+The paper reports elements/cycle for its vector routines on the M1 at
+100 MHz.  We benchmark the same primitive classes through the public kernel
+API (ref backend -- the XLA path that the dry-run lowers; the Pallas bodies
+are validated separately in interpret mode, which is a correctness
+interpreter, not a performance path) and report us/call plus the derived
+elements/us.  On-CPU numbers calibrate nothing about the TPU -- the TPU
+projection column divides the memory-bound byte volume by v5e HBM bandwidth
+(these ops are all memory-bound; see EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import kernels
+from repro.roofline import HBM_BW
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # vector-vector (translation) and vector-scalar (scaling), 1M elements
+    m, n = 1024, 1024
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    z = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+
+    vecadd = jax.jit(lambda a, b: kernels.vecadd(a, b))
+    us = _time(vecadd, x, z)
+    tpu_us = 3 * x.size * 4 / HBM_BW * 1e6
+    rows.append(f"kernel_vecadd_translation_1M,{us:.1f},"
+                f"elems_per_us={x.size/us:.0f};tpu_projection_us={tpu_us:.1f}")
+
+    scale = jax.jit(lambda a, b: kernels.scale(a, b))
+    us = _time(scale, x, s)
+    rows.append(f"kernel_scale_scaling_1M,{us:.1f},"
+                f"elems_per_us={x.size/us:.0f};tpu_projection_us={tpu_us:.1f}")
+
+    affine = jax.jit(lambda a, b, c: kernels.affine(a, b, c))
+    us = _time(affine, x, s, t)
+    rows.append(f"kernel_affine_fused_1M,{us:.1f},"
+                f"elems_per_us={x.size/us:.0f};fusion_saves=1x_hbm_pass")
+
+    # rotation (rope) on a (8, 4096, 128) head block
+    xr = jnp.asarray(rng.standard_normal((8, 4096, 128)), jnp.bfloat16)
+    cos, sin = kernels.rope_tables(jnp.arange(4096), 128)
+    rope = jax.jit(lambda a: kernels.rope(a, cos, sin))
+    us = _time(rope, xr)
+    rows.append(f"kernel_rope_rotation,{us:.1f},elems_per_us={xr.size/us:.0f}")
+
+    # matmul (rotation/composite) 1024^3
+    a = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.bfloat16)
+    b = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.bfloat16)
+    mm = jax.jit(lambda p, q: kernels.matmul(p, q))
+    us = _time(mm, a, b)
+    fl = 2 * 1024 ** 3
+    rows.append(f"kernel_matmul_1k3,{us:.1f},"
+                f"gflops_cpu={fl/us/1e3:.1f};tpu_projection_us={fl/197e12*1e6:.1f}")
+
+    # rmsnorm fused (derived-scalar scaling)
+    g = jnp.ones((n,), jnp.float32)
+    rn = jax.jit(lambda p: kernels.rmsnorm(p, g))
+    us = _time(rn, x)
+    rows.append(f"kernel_rmsnorm_1M,{us:.1f},elems_per_us={x.size/us:.0f}")
+
+    # blockwise attention (composite), 4k causal
+    q = jnp.asarray(rng.standard_normal((1, 8, 4096, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 4096, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 4096, 64)), jnp.bfloat16)
+    att = jax.jit(lambda a, b, c: kernels.attention(a, b, c))
+    us = _time(att, q, k, v, iters=3)
+    fl = 4 * 8 * 4096 * 4096 * 64 / 2
+    rows.append(f"kernel_attention_4k,{us:.1f},gflops_cpu={fl/us/1e3:.1f}")
+    return rows

@@ -1,0 +1,107 @@
+"""Reproduction of the paper's Tables 3, 4 and 5.
+
+For every (algorithm, system, n) cell we print three sources side by side:
+  paper    -- the published number (intel.PAPER_TABLE5),
+  model    -- our instruction-level Intel cycle model (Tables 3-4),
+  emulator -- the M1 emulator executing the reconstructed TinyRISC program
+              (functionally validated against int16 oracles).
+
+Known deltas (analysed in EXPERIMENTS.md section Faithful):
+  * Table 3's 64-element totals are arithmetic slips in the paper (769/1723
+    published vs 706/1732 from its own per-instruction clocks);
+  * the matrix routines (rotation 256c, composite II 70c) have no published
+    listing; our reconstruction is faster (90c / 25c) because it overlaps
+    context loads -- both numbers are reported.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analysis
+from repro.core.morphosys import intel, programs
+
+
+def _emulator_cycles() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for n in (8, 64):
+        u = rng.integers(-1000, 1000, n)
+        v = rng.integers(-1000, 1000, n)
+        rt = programs.run_translation(u, v)
+        assert np.array_equal(rt.values, programs.oracle_translation(u, v))
+        out[("translation", n)] = rt.cycles
+        rs = programs.run_scaling(u, 5)
+        assert np.array_equal(rs.values, programs.oracle_scaling(u, 5))
+        out[("scaling", n)] = rs.cycles
+    a = rng.integers(-100, 100, (8, 8))
+    b = rng.integers(-1000, 1000, (8, 8))
+    rm = programs.run_matmul(a, b)
+    assert np.array_equal(rm.values, programs.oracle_matmul(a, b))
+    out[("rotation_matmul", 64)] = rm.cycles
+    pts = rng.integers(-100, 100, (2, 8))
+    rr = programs.run_rotation_points((3, 4), pts)
+    out[("composite_ii", 16)] = rr.cycles
+    return out
+
+
+def table3() -> list[str]:
+    """Vector-vector translation: Intel cycle models vs paper."""
+    rows = []
+    for n in (8, 64):
+        for cpu in ("80486", "80386"):
+            model = intel.translation_cycles(cpu, n)
+            paper = intel.paper_row("translation", cpu, n).cycles
+            rows.append(f"table3_translation_{cpu}_n{n},"
+                        f"{intel.time_us(cpu, model):.3f},"
+                        f"model={model};paper={paper};match={model == paper}")
+    return rows
+
+
+def table4() -> list[str]:
+    """Vector-scalar scaling: Intel cycle models vs paper."""
+    rows = []
+    for n in (8, 64):
+        for cpu in ("80486", "80386"):
+            model = intel.scaling_cycles(cpu, n)
+            paper = intel.paper_row("scaling", cpu, n).cycles
+            rows.append(f"table4_scaling_{cpu}_n{n},"
+                        f"{intel.time_us(cpu, model):.3f},"
+                        f"model={model};paper={paper};match={model == paper}")
+    return rows
+
+
+def table5() -> list[str]:
+    """Full comparison incl. speedups; emulator validates the M1 rows."""
+    emu = _emulator_cycles()
+    rows = []
+    perf_rows = []
+    for row in intel.PAPER_TABLE5:
+        if row.system == "m1":
+            got = emu.get((row.algorithm, row.n_elements))
+            perf_rows.append(analysis.derive(row.algorithm, "m1",
+                                             row.n_elements, got,
+                                             source="emulator"))
+            rows.append(f"table5_{row.algorithm}_m1_n{row.n_elements},"
+                        f"{got / intel.CLOCK_MHZ['m1']:.3f},"
+                        f"emulator={got};paper={row.cycles};"
+                        f"match={got == row.cycles}")
+        else:
+            m1_paper = intel.paper_row(row.algorithm, "m1",
+                                       row.n_elements).cycles
+            speedup = row.cycles / m1_paper
+            perf_rows.append(analysis.derive(row.algorithm, row.system,
+                                             row.n_elements, row.cycles,
+                                             ref_cycles=m1_paper,
+                                             source="paper"))
+            rows.append(f"table5_{row.algorithm}_{row.system}_n{row.n_elements},"
+                        f"{intel.time_us(row.system, row.cycles):.3f},"
+                        f"speedup_vs_m1={speedup:.2f};paper_speedup={row.speedup}")
+    print(analysis.format_table(perf_rows))
+    return rows
+
+
+def run() -> list[str]:
+    out = []
+    for fn in (table3, table4, table5):
+        out.extend(fn())
+    return out

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run sweep (results/dryrun.jsonl).
+
+One row per (arch x shape x mesh) cell: the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.
+This is the source table for EXPERIMENTS.md section Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                       "dryrun.jsonl")
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return list(recs.values())
+
+
+def format_rows(recs: list[dict], mesh: str = "16x16") -> list[str]:
+    rows = []
+    hdr = (f"{'arch':<22}{'shape':<13}{'kind':<8}{'t_comp':>9}{'t_mem':>9}"
+           f"{'t_coll':>9}{'bound':>11}{'useful':>8}{'roof%':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "SKIP":
+            print(f"{r['arch']:<22}{r['shape']:<13}SKIP     ({r['reason'][:48]})")
+            rows.append(f"roofline_{r['arch']}_{r['shape']},0,SKIP")
+            continue
+        if r["status"] != "OK":
+            print(f"{r['arch']:<22}{r['shape']:<13}FAIL     {r.get('error','')[:60]}")
+            rows.append(f"roofline_{r['arch']}_{r['shape']},0,FAIL")
+            continue
+        rf = r["roofline"]
+        print(f"{r['arch']:<22}{r['shape']:<13}{r['kind']:<8}"
+              f"{rf['t_compute']:>9.4f}{rf['t_memory']:>9.4f}"
+              f"{rf['t_collective']:>9.4f}{rf['bottleneck']:>11}"
+              f"{rf['useful_flops_ratio']:>8.3f}"
+              f"{rf['roofline_fraction']*100:>7.2f}%")
+        rows.append(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']},"
+            f"{max(rf['t_compute'], rf['t_memory'], rf['t_collective'])*1e6:.0f},"
+            f"bottleneck={rf['bottleneck']};roof_frac={rf['roofline_fraction']:.4f}")
+    return rows
+
+
+def run() -> list[str]:
+    recs = load()
+    if not recs:
+        print("roofline: no results/dryrun.jsonl yet -- run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--out results/dryrun.jsonl")
+        return ["roofline_table,0,missing_results"]
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        if any(r["mesh"] == mesh for r in recs):
+            print(f"\n== mesh {mesh} ==")
+            out.extend(format_rows(recs, mesh))
+    return out

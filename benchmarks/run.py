@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (plus human-readable tables on the
+way).  Invoke:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    # keep repo-root execution working (src layout)
+    sys.path.insert(0, "src")
+    from benchmarks import kernel_bench, paper_tables, roofline_bench
+
+    rows: list[str] = []
+    print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
+    rows += paper_tables.run()
+    print("\n== kernel microbenchmarks (paper primitives on the TPU mapping) ==")
+    rows += kernel_bench.run()
+    print("\n== roofline (from multi-pod dry-run) ==")
+    rows += roofline_bench.run()
+
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

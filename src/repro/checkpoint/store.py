@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing: atomic npz shards + manifest.
+
+Protocol (restart-safe by construction):
+  1. arrays written to ``step_<k>.tmp/`` as one npz per top-level group,
+  2. ``manifest.json`` (tree signature, shapes, step, wall time) written last,
+  3. directory atomically renamed to ``step_<k>/`` -- a checkpoint without a
+     completed rename never existed.
+
+``latest_step`` only returns fully-renamed checkpoints, so a job killed
+mid-save restarts from the previous good step.  Restoration is
+template-based: the caller supplies a pytree of the right structure (from
+``model.init`` under ``jax.eval_shape`` -- no real init cost) and arrays are
+matched by tree path, which also validates structure drift.  Async saves run
+on a daemon thread (device->host copy happens on the caller's thread so the
+step's arrays are snapshotted before the optimizer mutates donated buffers).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _tree_items(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _signature(tree) -> str:
+    items = [(k, tuple(np.shape(v)), str(np.asarray(v).dtype) if not hasattr(v, "dtype") else str(v.dtype))
+             for k, v in _tree_items(tree)]
+    return hashlib.sha256(json.dumps(items, sort_keys=True).encode()).hexdigest()
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
+                    extra: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step:09d}.tmp")
+    final = os.path.join(directory, f"step_{step:09d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    items = _tree_items(tree)
+
+    def savable(v):
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.kind == "V":      # ml_dtypes (bf16/fp8): npz-unsafe
+            a = a.astype(np.float32)  # lossless upcast; template restores
+        return a
+
+    arrays = {f"a{i:05d}": savable(v) for i, (_, v) in enumerate(items)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "keys": [k for k, _ in items],
+        "signature": _signature(tree),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(_list_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+def _list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name.split("_")[1]))
+    return out
+
+
+def latest_step(directory: str) -> int | None:
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template, step: int | None = None):
+    """Restore ``template``-structured tree.  Returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    items = _tree_items(template)
+    if manifest["keys"] != [k for k, _ in items]:
+        raise ValueError("checkpoint tree structure does not match template")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"a{i:05d}"] for i in range(len(items))]
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    restored = [np.asarray(a, dtype=t.dtype).reshape(t.shape)
+                for a, t in zip(leaves, flat_t)]
+    return treedef.unflatten([jax.numpy.asarray(a) for a in restored]), step
+
+
+class CheckpointManager:
+    """Periodic + async checkpointing with bounded retention."""
+
+    def __init__(self, directory: str, *, interval: int = 100, keep: int = 3):
+        self.directory = directory
+        self.interval = interval
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree, *, blocking: bool = False,
+                   extra: dict | None = None) -> bool:
+        if step % self.interval:
+            return False
+        self.wait()
+        # snapshot on caller thread (donated buffers may be reused next step)
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        if blocking:
+            save_checkpoint(self.directory, step, host_tree, keep=self.keep,
+                            extra=extra)
+            return True
+        self._thread = threading.Thread(
+            target=save_checkpoint,
+            args=(self.directory, step, host_tree),
+            kwargs=dict(keep=self.keep, extra=extra), daemon=True)
+        self._thread.start()
+        return True
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

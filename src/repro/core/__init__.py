@@ -1,0 +1,10 @@
+"""The paper's primary contribution: linear-algebra mapping + perf analysis.
+
+``morphosys``        -- faithful M1 emulator + Intel cycle models
+``transform_engine`` -- the TPU re-expression of the mapping
+``analysis``         -- the paper's performance-analysis methodology
+"""
+from repro.core import analysis, transform_engine
+from repro.core import morphosys
+
+__all__ = ["analysis", "transform_engine", "morphosys"]

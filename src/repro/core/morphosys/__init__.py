@@ -1,0 +1,25 @@
+"""Faithful-reproduction layer: MorphoSys M1 emulator (mULATE analogue).
+
+The paper maps linear-algebraic functions (vector-vector "translation",
+vector-scalar "scaling", matrix-matrix "rotation/composite") onto the
+MorphoSys M1 coarse-grained reconfigurable array and reports cycle counts
+against Intel 80386/80486/Pentium instruction-level cycle models.
+
+This package re-implements:
+  * the 8x8 RC array, double-banked frame buffer and context memory
+    (``rc_array``),
+  * the TinyRISC control-ISA subset used by the paper's listings, with
+    1-instruction/cycle accounting (``isa``),
+  * program generators for the paper's Table 1 / Table 2 routines plus the
+    section-5.3 matrix mapping (``programs``),
+  * the Intel cycle models of Tables 3-4 and the published Table 5 constants
+    (``intel``).
+"""
+from repro.core.morphosys.rc_array import FrameBuffer, RCArray, ContextMemory, encode_context, decode_context
+from repro.core.morphosys.isa import Machine, Program, I
+from repro.core.morphosys import programs, intel
+
+__all__ = [
+    "FrameBuffer", "RCArray", "ContextMemory", "encode_context", "decode_context",
+    "Machine", "Program", "I", "programs", "intel",
+]

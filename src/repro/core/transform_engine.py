@@ -1,0 +1,86 @@
+"""Transform engine -- the paper's "graphics acceleration library" in JAX.
+
+Section 7 of the paper: "The discussed findings are part of a complete
+graphics acceleration library using the M1 reconfigurable system."  This
+module is that library re-expressed for TPU: the three primitive classes
+(vector-vector, vector-scalar, matrix) as composable JAX transforms, each
+dispatched to the corresponding Pallas kernel on TPU (ref oracle on CPU).
+
+Points are row vectors (..., 2) in 2D (or (..., 3) homogeneous), so a
+composite transform chain is a single right-multiplied matrix product --
+exactly the paper's "General Composite Algorithm using Matrix Algorithm".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels import affine as k_affine
+from repro.kernels import matmul as k_matmul
+from repro.kernels import rotate2d as k_rotate2d
+from repro.kernels import scale as k_scale
+from repro.kernels import translate as k_translate
+from repro.kernels import vecadd as k_vecadd
+
+
+# -- primitive transforms (paper sections 5.1-5.3) ---------------------------
+
+def translate(points: jnp.ndarray, t, *, backend=None) -> jnp.ndarray:
+    """q = p + t (vector-vector; Table 1)."""
+    return k_translate(points, jnp.asarray(t, points.dtype), backend=backend)
+
+
+def scale(points: jnp.ndarray, s, *, backend=None) -> jnp.ndarray:
+    """q = S x p, diagonal S (vector-scalar; Table 2)."""
+    return k_scale(points, jnp.asarray(s, points.dtype), backend=backend)
+
+
+def rotate(points: jnp.ndarray, theta, *, backend=None) -> jnp.ndarray:
+    """q = R(theta) p (matrix algorithm; section 5.3)."""
+    return k_rotate2d(points, theta, backend=backend)
+
+
+def affine(points: jnp.ndarray, s, t, *, backend=None) -> jnp.ndarray:
+    """q = S x p + t fused (beyond-paper fusion of 5.1 + 5.2)."""
+    return k_affine(points, jnp.asarray(s, points.dtype),
+                    jnp.asarray(t, points.dtype), backend=backend)
+
+
+def vecadd(u: jnp.ndarray, v: jnp.ndarray, *, backend=None) -> jnp.ndarray:
+    """Elementwise u + v, the raw Table 1 op."""
+    return k_vecadd(u, v, backend=backend)
+
+
+# -- composite transforms (paper's "General Composite Algorithm") ------------
+
+@dataclasses.dataclass(frozen=True)
+class Transform2D:
+    """Homogeneous 3x3 transform composed right-to-left like the paper's
+    matrix algorithm; applying it is one matmul on the array."""
+    matrix: jnp.ndarray  # (3, 3)
+
+    @staticmethod
+    def identity() -> "Transform2D":
+        return Transform2D(jnp.eye(3, dtype=jnp.float32))
+
+    def then_translate(self, tx, ty) -> "Transform2D":
+        m = jnp.array([[1, 0, 0], [0, 1, 0], [tx, ty, 1]], jnp.float32)
+        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+
+    def then_scale(self, sx, sy) -> "Transform2D":
+        m = jnp.array([[sx, 0, 0], [0, sy, 0], [0, 0, 1]], jnp.float32)
+        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+
+    def then_rotate(self, theta) -> "Transform2D":
+        c, s = jnp.cos(theta), jnp.sin(theta)
+        m = jnp.array([[c, s, 0], [-s, c, 0], [0, 0, 1]], jnp.float32)
+        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+
+    def apply(self, points: jnp.ndarray, *, backend=None) -> jnp.ndarray:
+        """points (..., 2) -> (..., 2) via one homogeneous matmul."""
+        flat = points.reshape(-1, 2)
+        ones = jnp.ones((flat.shape[0], 1), points.dtype)
+        homo = jnp.concatenate([flat, ones], axis=-1)
+        out = k_matmul(homo, self.matrix.astype(points.dtype), backend=backend)
+        return out[:, :2].reshape(points.shape)

@@ -1,0 +1,5 @@
+from repro.distributed import compression, elastic, sharding
+
+# repro.distributed.steps imports the model layer; import it directly to
+# keep this package importable from inside model code (sharding constraints).
+__all__ = ["sharding", "compression", "elastic"]

@@ -1,0 +1,35 @@
+"""Elastic re-meshing: resume a checkpoint on a different device count.
+
+The checkpoint stores full (unsharded) host arrays; resuming onto a
+smaller/larger mesh is therefore just re-placement under the new mesh's
+sharding rules.  The data pipeline is stateless-seekable, so the resumed
+job replays from the exact step with the new data-parallel width -- the
+global batch is preserved (accumulation steps scale inversely with the
+data-axis size).  See tests/test_elastic.py for the shrink-and-resume
+drill and launch/train.py for the entry point.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed import sharding
+
+
+def place(tree, mesh, spec_tree):
+    """Device_put a host pytree onto ``mesh`` under ``spec_tree``."""
+    shardings = sharding.to_shardings(spec_tree, mesh)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def replan_accum(global_batch: int, micro_per_shard: int, mesh) -> int:
+    """Recompute gradient-accumulation steps for the current mesh so the
+    global batch is invariant under elastic resizes."""
+    fsdp, _ = sharding.axis_names(mesh)
+    data_width = 1
+    for a in fsdp:
+        data_width *= mesh.shape[a]
+    micro = micro_per_shard * data_width
+    if global_batch % micro:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by microbatch {micro}")
+    return global_batch // micro

@@ -1,0 +1,57 @@
+"""Train / serve step builders (pure functions to be pjit'd by the launcher).
+
+Training: microbatch gradient accumulation via lax.scan over the leading
+``accum`` dim of the batch.  Per-microbatch backward reduces grads over the
+fsdp axes in bf16 (implicit compression, see distributed/compression.py);
+accumulation and the optimizer run in fp32.  Params/opt-state are donated by
+the launcher so per-device memory stays flat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, accum_steps: int):
+    def loss_fn(params, microbatch):
+        return model.loss(params, microbatch)
+
+    def train_step(params, opt_state, batch):
+        """batch leaves: (accum, micro, ...)."""
+        if accum_steps == 1:
+            mb = jax.tree.map(lambda a: a[0], batch)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def body(carry, mb):
+                gacc, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+                return (gacc, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(body, (zeros, 0.0), batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = lsum / accum_steps
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, pos, cache):
+        return model.decode(params, tokens, pos, cache)
+    return decode_step

@@ -1,0 +1,313 @@
+"""Loop-aware analysis of compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies
+ONCE, which under-reports scanned-layer models by ~n_layers x.  This module
+re-derives the roofline inputs from the compiled artifact itself:
+
+  1. parse the module into computations/instructions,
+  2. walk the call graph propagating loop multipliers taken from each while
+     op's ``known_trip_count`` backend_config (XLA annotates these for
+     counted loops; a missing annotation falls back to 1 and is reported),
+  3. FLOPs   = sum over dot/convolution ops of 2*prod(out)*prod(contract)
+               x the enclosing multiplier,
+  4. HBM     = sum over non-fused instruction operand+output bytes x
+               multiplier (fusion internals touch VMEM/registers only;
+               gather/dynamic-slice operands counted at output size),
+  5. collective bytes = same walk filtered to all-gather / all-reduce /
+               reduce-scatter / all-to-all / collective-permute.
+
+Shapes in the partitioned module are per-device, so all results are
+per-device quantities (see repro.roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# computation headers start at column 0: "%name (args) -> ... {" / "ENTRY ..."
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.+?)\s+([a-z0-9\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\":{]+n[\\":]+(\d+)')
+_CALLREF_SINGLE = re.compile(r"(?:body|to_apply|calls|condition)=%?([\w.\-]+)")
+_CALLREF_LIST = re.compile(r"(?:branch_computations|called_computations)=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _out_elems_dims(shape_text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shape_text: str
+    line: str
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_list_bytes(self.out_shape_text)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_fusion: bool = False
+
+
+class Module:
+    def __init__(self, text: str):
+        self.computations: dict[str, Computation] = {}
+        self.def_shape: dict[str, str] = {}        # instr name -> shape text
+        self.entry: str | None = None
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            if raw and not raw[0].isspace() and "(" in raw:
+                hdr = _COMP_HDR.match(raw)
+                if hdr:
+                    cur = Computation(hdr.group(2), [])
+                    cur.is_fusion = "fused_computation" in cur.name
+                    self.computations[cur.name] = cur
+                    if hdr.group(1):
+                        self.entry = cur.name
+                    continue
+            m = _INSTR_RE.match(raw)
+            if m and cur is not None:
+                inst = Instr(m.group(1), m.group(3), m.group(2), raw)
+                cur.instrs.append(inst)
+                self.def_shape[inst.name] = inst.out_shape_text
+            # parameters also define shapes:  %p = f32[..] parameter(0)
+        # multipliers
+        self.mult = self._multipliers()
+
+    # -- call-graph walk with trip counts -------------------------------------
+    def _multipliers(self) -> dict[str, float]:
+        mult = {name: 0.0 for name in self.computations}
+        if self.entry is None:
+            # fall back: treat first computation as entry
+            self.entry = next(iter(self.computations), None)
+        if self.entry is None:
+            return mult
+        mult[self.entry] = 1.0
+        # iterate to fixpoint (call graph is a DAG; few passes suffice)
+        for _ in range(len(self.computations)):
+            changed = False
+            for comp in self.computations.values():
+                base = mult.get(comp.name, 0.0)
+                if base == 0.0:
+                    continue
+                for inst in comp.instrs:
+                    refs = _CALLREF_SINGLE.findall(inst.line)
+                    for group in _CALLREF_LIST.findall(inst.line):
+                        refs.extend(t.strip().lstrip("%")
+                                    for t in group.split(",") if t.strip())
+                    if not refs:
+                        continue
+                    trips = 1.0
+                    if inst.opcode == "while":
+                        t = _TRIP_RE.search(inst.line)
+                        trips = float(t.group(1)) if t else 1.0
+                    for target in refs:
+                        if target not in mult:
+                            continue
+                        val = base * trips
+                        if val > mult[target]:
+                            mult[target] = val
+                            changed = True
+            if not changed:
+                break
+        return mult
+
+    # -- analyses -----------------------------------------------------------
+    def flops(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for inst in comp.instrs:
+                if inst.opcode not in ("dot", "convolution"):
+                    continue
+                shapes = _out_elems_dims(inst.out_shape_text)
+                out_elems = 0
+                for _, dims in shapes:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    out_elems += n
+                k = self._contraction_size(inst)
+                total += 2.0 * out_elems * k * m
+        return total
+
+    def _operand_section(self, inst: Instr) -> str:
+        start = inst.line.find(inst.opcode + "(") + len(inst.opcode) + 1
+        end = inst.line.find(")", start)
+        return inst.line[start:end if end > 0 else None]
+
+    def _contraction_size(self, inst: Instr) -> float:
+        mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.line)
+        if not mm:
+            return 1.0
+        dims = [int(d) for d in mm.group(1).split(",") if d]
+        operand_text = self._operand_section(inst)
+        shapes = _out_elems_dims(operand_text)
+        if not shapes:   # operands printed without types: symbol table
+            names = _OPERAND_RE.findall(operand_text)
+            if not names:
+                return 1.0
+            shapes = _out_elems_dims(self.def_shape.get(names[0], ""))
+            if not shapes:
+                return 1.0
+        lhs_dims = shapes[0][1]
+        k = 1.0
+        for d in dims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return k
+
+    _SKIP_MEM = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "copy-start", "copy-done", "after-all",
+                 "partition-id", "replica-id", "iota", "while", "call",
+                 "conditional", "custom-call"}
+
+    def _operand_bytes(self, inst: Instr) -> int:
+        operand_text = self._operand_section(inst)
+        # shapes if printed inline, else resolve %names via the symbol table
+        inline = _shape_list_bytes(operand_text)
+        if inline:
+            return inline
+        total = 0
+        for name in _OPERAND_RE.findall(operand_text):
+            total += _shape_list_bytes(self.def_shape.get(name, ""))
+        return total
+
+    def hbm_bytes(self) -> float:
+        """Materialisation traffic: every top-level (unfused) result is one
+        HBM write + one later read (2x output bytes).  Operand sizes are NOT
+        summed -- a fusion that reads a dynamic slice of a stacked scan
+        parameter would otherwise be charged the whole stack per iteration.
+        dynamic-update-slice is charged at update size (in-place semantics);
+        gather/dynamic-slice at output size."""
+        total = 0.0
+        for comp in self.computations.values():
+            if comp.is_fusion:
+                continue
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for inst in comp.instrs:
+                if inst.opcode in self._SKIP_MEM or "-done" in inst.opcode:
+                    continue
+                out_b = self._effective_out_bytes(inst)
+                total += 2.0 * out_b * m
+        return total
+
+    def _dus_update_bytes(self, inst: Instr) -> int:
+        ops = _OPERAND_RE.findall(self._operand_section(inst))
+        if len(ops) > 1:
+            return _shape_list_bytes(self.def_shape.get(ops[1], ""))
+        return 0
+
+    _UNARY_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape",
+                          "transpose")
+
+    def _chase(self, by_name: dict, name: str, depth: int = 6):
+        """Follow unary value chains (convert/bitcast/...) to the source."""
+        it = by_name.get(name)
+        while it is not None and depth > 0 and \
+                it.opcode in self._UNARY_PASSTHROUGH:
+            ops = _OPERAND_RE.findall(self._operand_section(it))
+            it = by_name.get(ops[0]) if ops else None
+            depth -= 1
+        return it
+
+    def _effective_out_bytes(self, inst: Instr) -> int:
+        """Output bytes, with in-place dynamic-update-slice charged at
+        update size -- including fusions whose root (possibly behind
+        convert/bitcast chains) is a DUS: scan residual buffers are written
+        one slice per iteration, not whole."""
+        if inst.opcode == "dynamic-update-slice":
+            return self._dus_update_bytes(inst) or inst.out_bytes
+        if inst.opcode != "fusion":
+            return inst.out_bytes
+        mm = re.search(r"calls=%?([\w.\-]+)", inst.line)
+        comp = self.computations.get(mm.group(1)) if mm else None
+        if not comp or not comp.instrs:
+            return inst.out_bytes
+        by_name = {i.name: i for i in comp.instrs}
+        root = comp.instrs[-1]
+        if root.opcode == "tuple":
+            total = 0
+            for nm in _OPERAND_RE.findall(self._operand_section(root)):
+                src = self._chase(by_name, nm)
+                if src is not None and src.opcode == "dynamic-update-slice":
+                    total += self._dus_update_bytes(src) or src.out_bytes
+                else:
+                    total += _shape_list_bytes(self.def_shape.get(nm, ""))
+            return total or inst.out_bytes
+        src = self._chase(by_name, root.name)
+        if src is not None and src.opcode == "dynamic-update-slice":
+            return self._dus_update_bytes(src) or inst.out_bytes
+        return inst.out_bytes
+
+    def collective_bytes(self) -> tuple[dict, dict]:
+        by_bytes = {k: 0.0 for k in COLLECTIVES}
+        by_count = {k: 0.0 for k in COLLECTIVES}
+        for comp in self.computations.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for inst in comp.instrs:
+                op = inst.opcode
+                if op.endswith("-start"):
+                    op = op[:-6]
+                elif op.endswith("-done"):
+                    continue
+                if op not in COLLECTIVES:
+                    continue
+                b = self._operand_bytes(inst) or inst.out_bytes
+                by_bytes[op] += b * m
+                by_count[op] += m
+        return by_bytes, by_count
+
+
+def analyze(text: str) -> dict:
+    mod = Module(text)
+    coll_bytes, coll_counts = mod.collective_bytes()
+    return {
+        "flops": mod.flops(),
+        "hbm_bytes": mod.hbm_bytes(),
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "n_computations": len(mod.computations),
+    }

@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's linear-algebra primitive classes.
+
+  affine          -- vector-vector + vector-scalar (translation/scaling, 5.1-5.2)
+  rope            -- rotation transform on head-dim pairs (5.3)
+  matmul          -- tiled MXU matmul (rotation/composite, 5.3)
+  rmsnorm         -- derived-scalar scaling fusion (beyond paper)
+  flash_attention -- streaming composite transform (beyond paper)
+  ssd             -- Mamba-2 intra-chunk core, VMEM-resident (beyond paper)
+
+Every family ships ``ops.py`` (public entry, backend-dispatched) and
+``ref.py`` (pure-jnp oracle).  See ``repro.kernels.dispatch``.
+"""
+from repro.kernels import dispatch
+from repro.kernels.affine import affine, scale, translate, vecadd
+from repro.kernels.flash_attention import attention, blockwise_attention
+from repro.kernels.matmul import matmul, rotate2d
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rope import rope, rope_tables
+from repro.kernels.ssd import ssd_intra
+
+__all__ = [
+    "dispatch", "affine", "scale", "translate", "vecadd", "attention",
+    "blockwise_attention", "matmul", "rotate2d", "rmsnorm", "rope",
+    "rope_tables", "ssd_intra",
+]

@@ -1,0 +1,3 @@
+from repro.kernels.affine.ops import affine, scale, translate, vecadd
+
+__all__ = ["affine", "scale", "translate", "vecadd"]

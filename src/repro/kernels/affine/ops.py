@@ -1,0 +1,56 @@
+"""Public entry points for the affine family (translate/scale/affine/vecadd).
+
+Shape-polymorphic wrappers: inputs of any rank are flattened to (M, N) with
+N = trailing dim; row parameters may be scalars or (N,) vectors.  Backend
+dispatch per ``repro.kernels.dispatch``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.affine import affine as K
+from repro.kernels.affine import ref
+
+
+def _as_row(p, n: int, dtype) -> jnp.ndarray:
+    p = jnp.asarray(p, dtype)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p, (n,))
+    return p.reshape(1, n)
+
+
+def affine(x: jnp.ndarray, s, t, *, backend: str | None = None) -> jnp.ndarray:
+    """y = s*x + t -- the fused translation+scaling composite.
+
+    ``s``/``t`` are scalars or (N,) vectors over the trailing dim of x."""
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return ref.affine(x, s, t)
+    n = x.shape[-1]
+    x2 = x.reshape(-1, n)
+    out = K.affine_2d(x2, _as_row(s, n, x.dtype), _as_row(t, n, x.dtype),
+                      interpret=(b == "interpret"))
+    return out.reshape(x.shape)
+
+
+def scale(x: jnp.ndarray, s, *, backend: str | None = None) -> jnp.ndarray:
+    """q = S x p, diagonal S (paper section 5.2 vector-scalar op)."""
+    return affine(x, s, jnp.zeros((), x.dtype), backend=backend)
+
+
+def translate(x: jnp.ndarray, t, *, backend: str | None = None) -> jnp.ndarray:
+    """q = p + t (paper section 5.1 vector-vector op, broadcast form)."""
+    return affine(x, jnp.ones((), x.dtype), t, backend=backend)
+
+
+def vecadd(x: jnp.ndarray, z: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    """y = x + z elementwise (Table 1; residual-add in the model stack)."""
+    assert x.shape == z.shape, (x.shape, z.shape)
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return ref.vecadd(x, z)
+    n = x.shape[-1]
+    out = K.vecadd_2d(x.reshape(-1, n), z.reshape(-1, n),
+                      interpret=(b == "interpret"))
+    return out.reshape(x.shape)

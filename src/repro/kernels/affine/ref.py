@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the affine kernel family (paper sections 5.1-5.2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def affine(x: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """y = s*x + t; s/t broadcast against x's trailing dims."""
+    return (x * jnp.asarray(s, x.dtype) + jnp.asarray(t, x.dtype)).astype(x.dtype)
+
+
+def vecadd(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    return (x + z.astype(x.dtype)).astype(x.dtype)
+
+
+def translate(p: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """q = p + t (paper section 4, Translations)."""
+    return vecadd(p, jnp.broadcast_to(jnp.asarray(t, p.dtype), p.shape))
+
+
+def scale(p: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """q = S x p with diagonal S (paper section 4, Scaling)."""
+    return (p * jnp.asarray(s, p.dtype)).astype(p.dtype)

@@ -1,0 +1,52 @@
+"""Kernel backend dispatch.
+
+Every kernel family exposes its public entry points through ``ops.py`` with a
+``backend`` argument resolved here:
+
+  * ``pallas``    -- compiled Pallas TPU kernel (the deployment path),
+  * ``interpret`` -- the same Pallas kernel body executed with
+                     ``interpret=True`` (CPU-correctness path; how this
+                     container validates the TPU kernels),
+  * ``ref``       -- the pure-jnp oracle in ``ref.py`` (also the lowering
+                     path for the CPU dry-run, and the autodiff path).
+
+This mirrors the paper's context-memory discipline: the *function* is fixed
+("the context word"), only the execution substrate changes.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_BACKEND: str = "auto"
+_VALID = ("auto", "pallas", "interpret", "ref")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def resolve(backend: str | None = None) -> str:
+    b = backend or _BACKEND
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return b
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    global _BACKEND
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _BACKEND = prev

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import (
+    attention, attention_reference, blockwise_attention,
+)
+
+__all__ = ["attention", "attention_reference", "blockwise_attention"]

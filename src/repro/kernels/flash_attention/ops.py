@@ -1,0 +1,40 @@
+"""Public attention entry: (B, Hq, S, D) x (B, Hkv, T, D) -> (B, Hq, S, D).
+
+Backends: ``pallas``/``interpret`` use the flash kernel; ``ref`` uses the
+blockwise-scan jnp path (differentiable; also the CPU dry-run lowering)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.flash_attention import flash_attention as K
+from repro.kernels.flash_attention import ref
+
+attention_reference = ref.attention
+blockwise_attention = ref.blockwise_attention
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              scale: float | None = None, causal: bool = True,
+              window: int | None = None, q_offset: int = 0,
+              block_kv: int = 1024, backend: str | None = None) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    be = dispatch.resolve(backend)
+    if be == "ref":
+        # SWA train/prefill: banded block attention, O(S*2W) instead of
+        # O(S*T) masked (EXPERIMENTS.md section Perf)
+        if (causal and window is not None and isinstance(q_offset, int)
+                and q_offset == 0 and s > 1 and k.shape[2] == s
+                and window < s and window % 128 == 0):
+            return ref.banded_swa_attention(q, k, v, scale=scale,
+                                            window=window)
+        return ref.blockwise_attention(q, k, v, scale=scale, causal=causal,
+                                       window=window, q_offset=q_offset,
+                                       block_kv=block_kv)
+    hkv, t = k.shape[1], k.shape[2]
+    out = K.flash_attention_3d(
+        q.reshape(b * hq, s, d), k.reshape(b * hkv, t, d),
+        v.reshape(b * hkv, t, d), scale=scale, causal=causal, window=window,
+        q_offset=q_offset, interpret=(be == "interpret"))
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,186 @@
+"""Attention oracles: full-softmax reference + memory-bounded blockwise scan.
+
+``attention`` is the fp32 full-softmax oracle used to validate the Pallas
+kernel.  ``blockwise_attention`` is the production jnp path (lax.scan over KV
+blocks with online softmax): differentiable, memory-bounded at 32k+ context,
+and the lowering path for CPU dry-runs.  Both take
+
+    q (B, Hq, S, D), k/v (B, Hkv, T, D)  ->  (B, Hq, S, D)
+
+with GQA expressed by Hq = G * Hkv; ``q_offset`` aligns q positions to the
+end of the KV axis for decode (qpos = q_offset + i, kpos = j).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int | None, t_actual: int | None):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if t_actual is not None:
+        m &= (kpos < t_actual)[None, :]
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _expand_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    if group == 1:
+        return x
+    b, hkv, t, d = x.shape
+    return jnp.broadcast_to(x[:, :, None], (b, hkv, group, t, d)).reshape(
+        b, hkv * group, t, d)
+
+
+def attention(q, k, v, *, scale: float, causal: bool = True,
+              window: int | None = None, q_offset: int = 0,
+              t_actual: int | None = None) -> jnp.ndarray:
+    """Full-softmax fp32 oracle (O(S*T) memory -- tests only)."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    k = _expand_kv(k, hq // hkv)
+    v = _expand_kv(v, hq // hkv)
+    q = (q * scale).astype(q.dtype)   # fold scale into q (one pass saved)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    qpos = q_offset + jnp.arange(s)
+    kpos = jnp.arange(t)
+    logits = jnp.where(_mask(qpos, kpos, causal, window, t_actual),
+                       logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def banded_swa_attention(q, k, v, *, scale: float, window: int) -> jnp.ndarray:
+    """Sliding-window attention as banded block attention (beyond-paper
+    optimization; see EXPERIMENTS.md section Perf, hymba cell).
+
+    Each window-sized query block attends only to its own and the previous
+    KV block -- O(S * 2W) score compute/memory instead of the blockwise
+    path's O(S * T).  The block dim shards over the "model" mesh axis
+    (sequence parallelism), which also rescues archs whose head count does
+    not divide the axis (hymba: 25 heads on a 16-way axis).  Dot inputs
+    stay bf16 with fp32 accumulation (MXU-native).
+
+    Requires self-attention from position 0 (q_offset == 0, t == s):
+    exactly the train/prefill shapes; decode uses the ring cache path.
+    """
+    from repro.distributed.sharding import constrain
+
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    assert t == s, (t, s)
+    k = _expand_kv(k, hq // hkv)
+    v = _expand_kv(v, hq // hkv)
+    win = window
+    pad = (-s) % win
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    nb = qp.shape[2] // win
+
+    def blocks(x):  # (B, H, S, D) -> (B, H, nb, win, D), nb sharded (SP)
+        xb = x.reshape(b, hq, nb, win, d)
+        return constrain(xb, "batch", None, "model", None, None)
+
+    qb, kb, vb = blocks(qp), blocks(kp), blocks(vp)
+    zero = jnp.zeros((b, hq, 1, win, d), kp.dtype)
+    kband = jnp.concatenate(
+        [jnp.concatenate([zero, kb[:, :, :-1]], axis=2), kb], axis=3)
+    vband = jnp.concatenate(
+        [jnp.concatenate([zero, vb[:, :, :-1]], axis=2), vb], axis=3)
+
+    logits = jax.lax.dot_general(
+        qb, kband, (((4,), (4,)), ((0, 1, 2), (0, 1, 2))),
+        preferred_element_type=jnp.float32) * scale     # (B,H,nb,win,2win)
+
+    ii = jnp.arange(win)
+    jj = jnp.arange(2 * win)
+    mask = (jj[None, :] <= win + ii[:, None]) & (jj[None, :] > ii[:, None])
+    first = jj[None, :] >= win                           # block 0: no prev
+    mask = jnp.where(jnp.arange(nb)[:, None, None] == 0,
+                     mask[None] & first[None], mask[None])
+    if pad:  # padded keys at the tail must not be attended
+        kpos = (jnp.arange(nb)[:, None, None] - 1) * win + jj[None, None, :]
+        mask = mask & (kpos < s)
+    logits = jnp.where(mask[None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jax.lax.dot_general(
+        p.astype(vband.dtype), vband,
+        (((4,), (3,)), ((0, 1, 2), (0, 1, 2))),
+        preferred_element_type=jnp.float32)              # (B,H,nb,win,D)
+    out = out.astype(q.dtype).reshape(b, hq, nb * win, d)
+    return out[:, :, :s]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "q_offset", "block_kv", "t_actual"))
+def blockwise_attention(q, k, v, *, scale: float, causal: bool = True,
+                        window: int | None = None, q_offset: int = 0,
+                        block_kv: int = 1024,
+                        t_actual: int | None = None) -> jnp.ndarray:
+    """Online-softmax scan over KV blocks; O(S * block_kv) live memory."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if t <= block_kv:  # single block: direct softmax, no online corrections
+        # (for 4k training this removes the inner KV scan whose per-step
+        # residual stacks dominate HBM traffic; EXPERIMENTS.md section Perf)
+        return attention(q, k, v, scale=scale, causal=causal, window=window,
+                         q_offset=q_offset, t_actual=t_actual)
+    if t % block_kv:   # pad KV to a block multiple; tail masked via t_actual
+        pad = block_kv - t % block_kv
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        t_actual = t if t_actual is None else min(t, t_actual)
+        t = k.shape[2]
+    nblocks = t // block_kv
+    kb = k.reshape(b, hkv, nblocks, block_kv, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nblocks, block_kv, d).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(s)
+    q = (q * scale).astype(q.dtype)   # fold scale: saves one S x T pass
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, ki = blk
+        kblk = _expand_kv(kblk, group)
+        vblk = _expand_kv(vblk, group)
+        # bf16 dot inputs, fp32 accumulation (MXU-native; see section Perf)
+        sc = jnp.einsum("bhsd,bhtd->bhst", q, kblk,
+                        preferred_element_type=jnp.float32)
+        kpos = ki * block_kv + jnp.arange(block_kv)
+        msk = jnp.ones((s, block_kv), bool)
+        if t_actual is not None:
+            msk &= (kpos < t_actual)[None, :]
+        if causal:
+            msk &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        sc = jnp.where(msk, sc, _NEG_INF)
+        m_cur = jnp.max(sc, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhst,bhtd->bhsd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hq, s, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, s, 1), jnp.float32),
+            jnp.zeros((b, hq, s, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kb, vb, jnp.arange(nblocks)))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

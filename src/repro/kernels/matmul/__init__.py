@@ -1,0 +1,3 @@
+from repro.kernels.matmul.ops import matmul, rotate2d
+
+__all__ = ["matmul", "rotate2d"]

@@ -1,0 +1,69 @@
+"""Pallas TPU tiled matmul -- the paper's section-5.3 matrix mapping.
+
+The MorphoSys mapping streams rows of A through the context plane while rows
+of B are broadcast to the array, accumulating in each cell's output register.
+The MXU analogue: A and B tiles stream HBM->VMEM along the contraction grid
+axis ("arbitrary" semantics = sequential, revisiting the same output block),
+accumulating into an fp32 VMEM scratch -- the cell output register writ
+large.  Block shapes default to MXU-native (128, 128) output tiles with a
+512-deep K panel; working set 2*(bm*bk + bk*bn) + bm*bn*4 bytes stays well
+under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.util import LANES, SUBLANES, pad_axis, pick_block
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype"))
+def matmul_2d(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+              bk: int = 512, interpret: bool = False,
+              out_dtype=None) -> jnp.ndarray:
+    """C = X @ Y for X (M, K), Y (K, N); fp32 accumulation."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    out_dtype = out_dtype or x.dtype
+    bm = pick_block(m, bm, SUBLANES)
+    bn = pick_block(n, bn, LANES)
+    bk = pick_block(k, bk, LANES)
+    xp = pad_axis(pad_axis(x, 0, bm), 1, bk)
+    yp = pad_axis(pad_axis(y, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = yp.shape[1]
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]

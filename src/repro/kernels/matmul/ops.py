@@ -1,0 +1,30 @@
+"""Public matmul entry (paper section 5.3: rotation/composite transforms)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.matmul import matmul as K
+from repro.kernels.matmul import ref
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray, *, backend: str | None = None,
+           out_dtype=None, bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
+    """C = X @ Y with fp32 accumulation; X rank >= 2 (leading dims batched)."""
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return ref.matmul(x, y, out_dtype=out_dtype)
+    lead = x.shape[:-2]
+    x2 = x.reshape(-1, x.shape[-1]) if lead else x
+    out = K.matmul_2d(x2, y, bm=bm, bn=bn, bk=bk,
+                      interpret=(b == "interpret"), out_dtype=out_dtype)
+    return out.reshape(*lead, x.shape[-2] if lead else out.shape[0], y.shape[-1]) \
+        if lead else out
+
+
+def rotate2d(points: jnp.ndarray, theta, *, backend: str | None = None) -> jnp.ndarray:
+    """Rotate (..., 2) points by angle theta -- the paper's rotation
+    transformation as a 2x2 matmul."""
+    c, s = jnp.cos(theta), jnp.sin(theta)
+    rot = jnp.array([[c, s], [-s, c]], points.dtype)  # right-multiply form
+    return matmul(points.reshape(-1, 2), rot, backend=backend).reshape(points.shape)

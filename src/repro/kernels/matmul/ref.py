@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled matmul (fp32 accumulation semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or x.dtype
+    acc = jax.lax.dot_general(x, y, (((x.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)

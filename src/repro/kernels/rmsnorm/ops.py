@@ -1,0 +1,19 @@
+"""Public RMSNorm entry (fused derived-scalar scaling)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm import rmsnorm as K
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, *, eps: float = 1e-6,
+            backend: str | None = None) -> jnp.ndarray:
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return ref.rmsnorm(x, gain, eps)
+    n = x.shape[-1]
+    out = K.rmsnorm_2d(x.reshape(-1, n), gain, eps=eps,
+                       interpret=(b == "interpret"))
+    return out.reshape(x.shape)

@@ -1,0 +1,11 @@
+"""Pure-jnp RMSNorm oracle (fp32 statistics, LLaMA convention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * gain.astype(jnp.float32)).astype(x.dtype)

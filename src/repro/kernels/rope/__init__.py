@@ -1,0 +1,3 @@
+from repro.kernels.rope.ops import rope, rope_tables
+
+__all__ = ["rope", "rope_tables"]

@@ -1,0 +1,22 @@
+"""Public RoPE entry (paper rotation transform -> rotary embedding)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.rope import ref
+from repro.kernels.rope import rope as K
+
+rope_tables = ref.rope_tables
+
+
+def rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+         *, backend: str | None = None) -> jnp.ndarray:
+    """Apply rotary embedding to x (..., S, D); cos/sin (S, D/2)."""
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return ref.rope(x, cos, sin)
+    lead = x.shape[:-2]
+    s, d = x.shape[-2:]
+    out = K.rope_3d(x.reshape(-1, s, d), cos, sin, interpret=(b == "interpret"))
+    return out.reshape(*lead, s, d)

@@ -1,0 +1,24 @@
+"""Pure-jnp RoPE oracle (half-split pairing, LLaMA convention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(positions: jnp.ndarray, d_head: int,
+                theta: float = 10000.0, dtype=jnp.float32):
+    """cos/sin tables (len(positions), d_head/2)."""
+    d2 = d_head // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d2, dtype=jnp.float32) / d2))
+    angles = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Apply RoPE to x (..., S, D) with cos/sin (S, D/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)

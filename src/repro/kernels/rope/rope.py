@@ -1,0 +1,59 @@
+"""Pallas TPU kernel for rotary position embedding -- the paper's rotation.
+
+Section 5.3 maps 2D point rotation onto the array as a matrix product with
+[[cos, -sin], [sin, cos]].  RoPE is exactly that transformation applied to
+(x1, x2) coordinate pairs of each attention head dimension, with a
+position-dependent angle: the modern descendant of the paper's geometric
+rotation.  We use the half-split pairing convention (x1 = first half of the
+head dim, x2 = second half), so the rotation is two fused affine ops:
+
+    y1 = x1*cos - x2*sin
+    y2 = x2*cos + x1*sin
+
+The sin/cos tables are staged per sequence block (the "context" for that
+block); heads stream through the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import SUBLANES, pad_axis, pick_block
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[0]                      # (bs, d)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[:, :d2], x[:, d2:]
+    cos, sin = cos_ref[...], sin_ref[...]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    o_ref[0] = jnp.concatenate([y1, y2], axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rope_3d(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+            *, interpret: bool = False) -> jnp.ndarray:
+    """Apply RoPE to x (BH, S, D) with cos/sin (S, D/2)."""
+    bh, s, d = x.shape
+    bs = pick_block(s, 512, SUBLANES)
+    xp = pad_axis(x, 1, bs)
+    cosp = pad_axis(cos.astype(x.dtype), 0, bs)
+    sinp = pad_axis(sin.astype(x.dtype), 0, bs)
+    sp = xp.shape[1]
+    out = pl.pallas_call(
+        _rope_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        grid=(bh, sp // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, d), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((bs, d // 2), lambda h, i: (i, 0)),
+            pl.BlockSpec((bs, d // 2), lambda h, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, d), lambda h, i: (h, i, 0)),
+        interpret=interpret,
+    )(xp, cosp, sinp)
+    return out[:, :s, :]

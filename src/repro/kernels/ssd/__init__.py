@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd_intra
+
+__all__ = ["ssd_intra"]

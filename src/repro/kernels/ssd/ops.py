@@ -1,0 +1,17 @@
+"""Public SSD intra-chunk entry, backend-dispatched."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.ssd import ref
+from repro.kernels.ssd import ssd as K
+
+
+def ssd_intra(xdt: jnp.ndarray, b_in: jnp.ndarray, c_in: jnp.ndarray,
+              cum: jnp.ndarray, *, backend: str | None = None):
+    """Intra-chunk SSD core; shapes as in kernels/ssd/ssd.py."""
+    be = dispatch.resolve(backend)
+    if be == "ref":
+        return ref.ssd_intra(xdt, b_in, c_in, cum)
+    return K.ssd_intra(xdt, b_in, c_in, cum, interpret=(be == "interpret"))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the SSD intra-chunk core (matches models/ssm.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra(xdt, b_in, c_in, cum):
+    """xdt (BC, lc, h, p), b_in/c_in (BC, lc, n), cum (BC, lc, h) ->
+    (y_intra (BC, lc, h, p) f32, s_c (BC, h, p, n) f32)."""
+    xdt = xdt.astype(jnp.float32)
+    b_in = b_in.astype(jnp.float32)
+    c_in = c_in.astype(jnp.float32)
+    cum = cum.astype(jnp.float32)
+    lc = xdt.shape[1]
+    g = jnp.einsum("cin,cjn->cij", c_in, b_in)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]      # (BC, i, j, h)
+    ii = jnp.arange(lc)
+    mask = (ii[:, None] >= ii[None, :])[None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    att = g[..., None] * decay
+    y = jnp.einsum("cijh,cjhp->cihp", att, xdt)
+    sdecay = jnp.exp(cum[:, -1:, :] - cum)              # (BC, lc, h)
+    w = xdt * sdecay[..., None]
+    s_c = jnp.einsum("cjhp,cjn->chpn", w, b_in)
+    return y, s_c

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk core.
+
+EXPERIMENTS.md section Perf (hymba/mamba2 cells) shows the XLA path's
+remaining memory term is the materialized intra-chunk tensors: G = C B^T,
+the masked decay, their product `att`, all (lc x lc) per (chunk, head).
+This kernel is the paper's thesis applied once more: the whole chunk
+computation is *blocked matrix algebra*, so it streams through VMEM like
+the MorphoSys frame buffer and only the (lc, p) outputs + (p, n) state
+contributions ever touch HBM.
+
+Per grid step (one (batch*chunk, head) pair), entirely in VMEM:
+
+    G     = C B^T                       (lc, lc)   one MXU dot
+    att   = G * exp(mask(cum_i - cum_j))
+    y     = att @ (x*dt)                (lc, p)    one MXU dot
+    w     = (x*dt) * exp(cum_last - cum)
+    S_c   = w^T B                       (p, n)     one MXU dot
+
+Working set ~ 3*(lc*lc) + 4*(lc*(n+p)) floats: lc=256, n=128, p=64 ->
+~1 MB, comfortably VMEM-resident.  The inter-chunk associative scan stays
+in jnp (log-depth, tiny).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_intra_kernel(c_ref, b_ref, cum_ref, xdt_ref, y_ref, s_ref):
+    cc = c_ref[0].astype(jnp.float32)                 # (lc, n)
+    bb = b_ref[0].astype(jnp.float32)                 # (lc, n)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)        # (lc,)
+    xdt = xdt_ref[0, :, 0, :].astype(jnp.float32)     # (lc, p)
+    lc = cc.shape[0]
+
+    g = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (lc, lc)
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (lc, lc), 1)
+    decay = jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+    att = g * decay
+
+    y = jax.lax.dot_general(att, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (lc, p)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    sdecay = jnp.exp(cum[-1] - cum)                    # (lc,)
+    w = xdt * sdecay[:, None]                          # (lc, p)
+    s_c = jax.lax.dot_general(w, bb, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (p, n)
+    s_ref[0, 0] = s_c.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(xdt: jnp.ndarray, b_in: jnp.ndarray, c_in: jnp.ndarray,
+              cum: jnp.ndarray, *, interpret: bool = False):
+    """Intra-chunk SSD.  xdt (BC, lc, h, p), b_in/c_in (BC, lc, n),
+    cum (BC, lc, h).  Returns (y_intra (BC, lc, h, p), s_c (BC, h, p, n))."""
+    bc, lc, h, p = xdt.shape
+    n = b_in.shape[-1]
+    y, s_c = pl.pallas_call(
+        _ssd_intra_kernel,
+        out_shape=(jax.ShapeDtypeStruct((bc, lc, h, p), jnp.float32),
+                   jax.ShapeDtypeStruct((bc, h, p, n), jnp.float32)),
+        grid=(bc, h),
+        in_specs=[
+            pl.BlockSpec((1, lc, n), lambda i, hh: (i, 0, 0)),
+            pl.BlockSpec((1, lc, n), lambda i, hh: (i, 0, 0)),
+            pl.BlockSpec((1, lc, 1), lambda i, hh: (i, 0, hh)),
+            pl.BlockSpec((1, lc, 1, p), lambda i, hh: (i, 0, hh, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, lc, 1, p), lambda i, hh: (i, 0, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda i, hh: (i, hh, 0, 0)),
+        ),
+        interpret=interpret,
+    )(c_in, b_in, cum, xdt)
+    return y, s_c

@@ -1,0 +1,43 @@
+"""Shared kernel utilities: alignment, padding, block-size selection.
+
+TPU alignment discipline (the MorphoSys analogue of "one column = 8 cells"):
+last dim in multiples of 128 lanes, second-to-last in multiples of 8
+sublanes; MXU tiles are 128x128.  ``ops.py`` wrappers pad to block multiples
+and slice back so the public API stays shape-polymorphic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128
+SUBLANES = 8
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def pick_block(dim: int, preferred: int, align: int) -> int:
+    """Largest aligned block <= preferred that is reasonable for ``dim``."""
+    if dim <= preferred:
+        return round_up(dim, align)
+    return preferred
+
+
+def pad_axis(x: jnp.ndarray, axis: int, multiple: int,
+             value: float = 0.0) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def pad2d(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    return pad_axis(pad_axis(x, -2, bm), -1, bn)

@@ -1,0 +1,5 @@
+from repro.models.config import ModelConfig, attention_flops, flops_per_token
+from repro.models.transformer import Model, build
+
+__all__ = ["ModelConfig", "Model", "build", "flops_per_token",
+           "attention_flops"]

@@ -1,0 +1,240 @@
+"""GQA attention with RoPE, sliding windows, and ring-buffer KV caches.
+
+Three entry modes share one parameter set:
+  * ``attend``      -- full-sequence training/encoding (no cache),
+  * ``prefill``     -- fills a cache (linear for full attention, ring buffer
+                       for SWA) and returns outputs for every position,
+  * ``decode_step`` -- one new token against the cache.
+
+The QK^T / PV products are the paper's matmul primitive, RoPE its rotation
+primitive, and the KV stream through the blockwise kernel its frame-buffer
+discipline; see repro.kernels.flash_attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as k_attention
+from repro.kernels import rope as k_rope
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.rope import ref as rope_ref
+from repro.models.config import ModelConfig
+
+
+def init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd), jnp.float32) * scale).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd), jnp.float32) * scale).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d), jnp.float32)
+               * (hq * hd) ** -0.5).astype(dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)   # (B, H, S, D)
+
+
+def _merge_heads(x):
+    b, h, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+
+
+def _qkv(params, x, cfg: ModelConfig, positions: Optional[jnp.ndarray],
+         use_rope: bool):
+    q = _split_heads(x @ params["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ params["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ params["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if use_rope:
+        cos, sin = rope_ref.rope_tables(positions, cfg.head_dim,
+                                        cfg.rope_theta, jnp.float32)
+        q = k_rope(q, cos, sin)
+        k = k_rope(k, cos, sin)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (training / encoder)
+# ---------------------------------------------------------------------------
+
+def attend(params, x: jnp.ndarray, cfg: ModelConfig, *, causal: bool = True,
+           block_kv: int = 4096) -> jnp.ndarray:
+    b, s, _ = x.shape
+    use_rope = cfg.pos_embed == "rope"
+    q, k, v = _qkv(params, x, cfg, jnp.arange(s), use_rope)
+    out = k_attention(q, k, v, causal=causal, window=cfg.window,
+                      block_kv=block_kv)
+    return _merge_heads(out) @ params["wo"]
+
+
+def cross_attend(params, x: jnp.ndarray, kv_cache: dict,
+                 cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = _split_heads(x @ params["wq"], cfg.n_heads, cfg.head_dim)
+    out = k_attention(q, kv_cache["k"], kv_cache["v"], causal=False)
+    return _merge_heads(out) @ params["wo"]
+
+
+def encode_kv(params, enc_out: jnp.ndarray, cfg: ModelConfig) -> dict:
+    """Precompute cross-attention K/V from encoder output (prefill)."""
+    k = _split_heads(enc_out @ params["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(enc_out @ params["wv"], cfg.n_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# KV cache (linear for full attention, ring buffer for SWA)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    batch: int
+    n_kv_heads: int
+    length: int          # cache slots: T_max (full) or window (SWA)
+    head_dim: int
+    ring: bool           # True for SWA ring buffer
+    dtype: str = "bfloat16"   # bfloat16 | int8 (per-slot-scaled KV quant)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> CacheSpec:
+    ring = cfg.window is not None and cfg.window < max_len
+    dtype = "int8" if cfg.kv_cache_dtype == "int8" else cfg.dtype
+    return CacheSpec(batch, cfg.n_kv_heads, cfg.window if ring else max_len,
+                     cfg.head_dim, ring, dtype)
+
+
+def init_cache(spec: CacheSpec):
+    shape = (spec.batch, spec.n_kv_heads, spec.length, spec.head_dim)
+    cache = {
+        # absolute position held in each slot (-1 = empty)
+        "kpos": jnp.full((spec.length,), -1, jnp.int32),
+    }
+    if spec.dtype == "int8":
+        # beyond-paper: per-(slot, head) scaled int8 KV -- halves the cache
+        # of the over-HBM 32k decode cells (EXPERIMENTS section Dry-run)
+        cache.update(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            kscale=jnp.zeros(shape[:3] + (1,), jnp.float32),
+            vscale=jnp.zeros(shape[:3] + (1,), jnp.float32))
+    else:
+        dt = jnp.dtype(spec.dtype)
+        cache.update(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt))
+    return cache
+
+
+def _quantize(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32) /
+                  jnp.maximum(scale, 1e-9)).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_kv(cache, which: str):
+    """Read k or v from the cache, dequantizing if int8."""
+    x = cache[which]
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) * cache[which[0] + "scale"]
+    return x
+
+
+def _write_linear(cache, k_new, v_new, start):
+    s = k_new.shape[2]
+    out = dict(cache)
+    if cache["k"].dtype == jnp.int8:
+        for name, val in (("k", k_new), ("v", v_new)):
+            q, scale = _quantize(val)
+            out[name] = jax.lax.dynamic_update_slice(
+                cache[name], q, (0, 0, start, 0))
+            out[name + "scale"] = jax.lax.dynamic_update_slice(
+                cache[name + "scale"], scale, (0, 0, start, 0))
+    else:
+        out["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, 0, start, 0))
+        out["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, 0, start, 0))
+    out["kpos"] = jax.lax.dynamic_update_slice(
+        cache["kpos"], start + jnp.arange(s, dtype=jnp.int32), (start,))
+    return out
+
+
+def _write_ring(cache, k_new, v_new, start, window):
+    s = k_new.shape[2]
+    positions = start + jnp.arange(s, dtype=jnp.int32)
+    slots = positions % window
+    if s >= window:      # only the last `window` entries survive
+        k_new = k_new[:, :, -window:]
+        v_new = v_new[:, :, -window:]
+        positions = positions[-window:]
+        slots = slots[-window:]
+    k = cache["k"].at[:, :, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, :, slots].set(v_new.astype(cache["v"].dtype))
+    kpos = cache["kpos"].at[slots].set(positions)
+    return {"k": k, "v": v, "kpos": kpos}
+
+
+def _cached_attention(q, cache, qpos, window):
+    """Attend q (B, Hq, S, D) over cache slots with per-slot absolute
+    positions (handles linear, ring, and int8-quantized layouts)."""
+    kpos = cache["kpos"]
+    group = q.shape[1] // cache["k"].shape[1]
+    valid = kpos >= 0
+    mask = valid[None, :] & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    k = attn_ref._expand_kv(_cache_kv(cache, "k"), group)
+    v = attn_ref._expand_kv(_cache_kv(cache, "v"), group)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits = logits * (q.shape[-1] ** -0.5)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def prefill(params, x: jnp.ndarray, cfg: ModelConfig, cache: dict,
+            start: int = 0, block_kv: int = 1024):
+    """Process a prompt, fill the cache, return per-position outputs."""
+    b, s, _ = x.shape
+    use_rope = cfg.pos_embed == "rope"
+    positions = start + jnp.arange(s)
+    q, k, v = _qkv(params, x, cfg, positions, use_rope)
+    out = k_attention(q, k, v, causal=True, window=cfg.window,
+                      q_offset=0, block_kv=block_kv)
+    ring = cfg.window is not None and cache["kpos"].shape[0] == cfg.window
+    if ring:
+        cache = _write_ring(cache, k, v, start, cfg.window)
+    else:
+        cache = _write_linear(cache, k.astype(cfg.activation_dtype),
+                              v.astype(cfg.activation_dtype), start)
+    return _merge_heads(out) @ params["wo"], cache
+
+
+def decode_step(params, x: jnp.ndarray, cfg: ModelConfig, cache: dict,
+                pos) -> tuple[jnp.ndarray, dict]:
+    """One token x (B, 1, d) at absolute position ``pos`` (traced ok)."""
+    use_rope = cfg.pos_embed == "rope"
+    positions = jnp.asarray(pos).reshape(1)
+    q, k, v = _qkv(params, x, cfg, positions, use_rope)
+    window = cfg.window
+    ring = window is not None and cache["kpos"].shape[0] == window
+    if ring:
+        slot = jnp.asarray(pos) % window
+        knew = cache["k"].at[:, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+        vnew = cache["v"].at[:, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+        kpos = cache["kpos"].at[slot].set(jnp.asarray(pos, jnp.int32))
+        cache = {"k": knew, "v": vnew, "kpos": kpos}
+    else:
+        cache = _write_linear(cache, k.astype(cfg.activation_dtype),
+                              v.astype(cfg.activation_dtype), pos)
+    out = _cached_attention(q, cache, positions, window)
+    return _merge_heads(out) @ params["wo"], cache

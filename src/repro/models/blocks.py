@@ -1,0 +1,182 @@
+"""Residual blocks for every assigned family, scan-compatible.
+
+``apply`` is the single entry used inside the layer scan; its cache pytree
+structure is fixed per family so prefill/decode scans stay uniform:
+
+  dense/moe : cache = attention cache dict
+  ssm       : cache = {state, conv}
+  hybrid    : cache = {"attn": ..., "ssm": ...}
+  encdec dec: cache = {"self": ..., "cross": {k, v}}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp, mlp_init, residual_add, rmsnorm
+
+
+def init(key, cfg: ModelConfig, dtype, role: str = "decoder"):
+    """One layer's params.  role: decoder | encoder | encdec_decoder."""
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {}
+    if cfg.family == "ssm":
+        p["ssm_norm"] = jnp.ones((d,), jnp.float32)
+        p["ssm"] = ssm_mod.init(ks[0], cfg, dtype)
+        return p
+    p["attn_norm"] = jnp.ones((d,), jnp.float32)
+    p["attn"] = attn.init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_mod.init(ks[1], cfg, dtype)
+        p["attn_gain"] = jnp.ones((d,), jnp.float32)
+        p["ssm_gain"] = jnp.ones((d,), jnp.float32)
+    if role == "encdec_decoder":
+        p["cross_norm"] = jnp.ones((d,), jnp.float32)
+        p["cross"] = attn.init(ks[2], cfg, dtype)
+    if cfg.d_ff:
+        p["mlp_norm"] = jnp.ones((d,), jnp.float32)
+        if cfg.n_experts:
+            p["moe"] = moe_mod.init(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _mixer_full(p, x, cfg: ModelConfig, causal: bool):
+    """Token mixer, full-sequence (train/encode).  Returns (delta, aux)."""
+    if cfg.family == "ssm":
+        return ssm_mod.forward(p["ssm"], rmsnorm(x, p["ssm_norm"], cfg.norm_eps), cfg), 0.0
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    a = attn.attend(p["attn"], h, cfg, causal=causal)
+    if cfg.family == "hybrid":
+        s = ssm_mod.forward(p["ssm"], h, cfg)
+        a = 0.5 * (rmsnorm(a, p["attn_gain"], cfg.norm_eps)
+                   + rmsnorm(s, p["ssm_gain"], cfg.norm_eps))
+    return a, 0.0
+
+
+def _ffn(p, x, cfg: ModelConfig):
+    """Channel mixer.  Returns (delta, aux)."""
+    if not cfg.d_ff:
+        return None, 0.0
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+        return y, aux
+    return mlp(p["mlp"], h), 0.0
+
+
+def apply(p, x: jnp.ndarray, cfg: ModelConfig, *, causal: bool = True,
+          cross_kv: Optional[dict] = None):
+    """Full-sequence block (training / encoding).  (x, aux) out."""
+    delta, _ = _mixer_full(p, x, cfg, causal)
+    x = constrain(residual_add(x, delta.astype(x.dtype)), "batch", None, None)
+    if cross_kv is not None:
+        h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+        x = residual_add(x, attn.cross_attend(p["cross"], h, cross_kv, cfg).astype(x.dtype))
+    delta, aux = _ffn(p, x, cfg)
+    if delta is not None:
+        x = constrain(residual_add(x, delta.astype(x.dtype)),
+                      "batch", None, None)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# cached paths
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, role: str,
+               enc_len: int = 0):
+    if cfg.family == "ssm":
+        return ssm_mod.init_cache(cfg, batch)
+    spec = attn.cache_spec(cfg, batch, max_len)
+    c = attn.init_cache(spec)
+    if cfg.family == "hybrid":
+        return {"attn": c, "ssm": ssm_mod.init_cache(cfg, batch)}
+    if role == "encdec_decoder":
+        hd = cfg.head_dim
+        z = jnp.zeros((batch, cfg.n_kv_heads, enc_len, hd), cfg.activation_dtype)
+        return {"self": c, "cross": {"k": z, "v": z}}
+    return c
+
+
+def prefill(p, x: jnp.ndarray, cfg: ModelConfig, cache, *, start: int = 0,
+            enc_out: Optional[jnp.ndarray] = None):
+    """Prompt pass filling the cache.  Returns (x, new_cache)."""
+    if cfg.family == "ssm":
+        h = rmsnorm(x, p["ssm_norm"], cfg.norm_eps)
+        delta, new_cache = ssm_mod.forward(p["ssm"], h, cfg,
+                                           conv_tail=cache["conv"],
+                                           return_state=True)
+        # accumulate prior state: forward starts from zeros, so fold in decay?
+        # prefill is always from start=0 for SSM cells; assert for clarity.
+        x = residual_add(x, delta.astype(x.dtype))
+        return x, new_cache
+    if cfg.family == "hybrid":
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        a, attn_cache = attn.prefill(p["attn"], h, cfg, cache["attn"], start=start)
+        s, ssm_cache = ssm_mod.forward(p["ssm"], h, cfg,
+                                       conv_tail=cache["ssm"]["conv"],
+                                       return_state=True)
+        delta = 0.5 * (rmsnorm(a, p["attn_gain"], cfg.norm_eps)
+                       + rmsnorm(s, p["ssm_gain"], cfg.norm_eps))
+        x = residual_add(x, delta.astype(x.dtype))
+        new_cache = {"attn": attn_cache, "ssm": ssm_cache}
+    else:
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        self_cache = cache["self"] if "cross" in p else cache
+        a, self_cache = attn.prefill(p["attn"], h, cfg, self_cache, start=start)
+        x = residual_add(x, a.astype(x.dtype))
+        if "cross" in p:
+            assert enc_out is not None
+            cross_kv = attn.encode_kv(p["cross"], enc_out, cfg)
+            h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+            x = residual_add(x, attn.cross_attend(p["cross"], h, cross_kv, cfg).astype(x.dtype))
+            new_cache = {"self": self_cache,
+                         "cross": {k: v.astype(cfg.activation_dtype)
+                                   for k, v in cross_kv.items()}}
+        else:
+            new_cache = self_cache
+    delta, _ = _ffn(p, x, cfg)
+    if delta is not None:
+        x = residual_add(x, delta.astype(x.dtype))
+    return x, new_cache
+
+
+def decode(p, x: jnp.ndarray, cfg: ModelConfig, cache, pos):
+    """One-token step.  Returns (x, new_cache)."""
+    if cfg.family == "ssm":
+        h = rmsnorm(x, p["ssm_norm"], cfg.norm_eps)
+        delta, new_cache = ssm_mod.decode_step(p["ssm"], h, cfg, cache)
+        return residual_add(x, delta.astype(x.dtype)), new_cache
+    if cfg.family == "hybrid":
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        a, attn_cache = attn.decode_step(p["attn"], h, cfg, cache["attn"], pos)
+        s, ssm_cache = ssm_mod.decode_step(p["ssm"], h, cfg, cache["ssm"])
+        delta = 0.5 * (rmsnorm(a, p["attn_gain"], cfg.norm_eps)
+                       + rmsnorm(s, p["ssm_gain"], cfg.norm_eps))
+        x = residual_add(x, delta.astype(x.dtype))
+        new_cache = {"attn": attn_cache, "ssm": ssm_cache}
+    else:
+        h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+        self_cache = cache["self"] if "cross" in p else cache
+        a, self_cache = attn.decode_step(p["attn"], h, cfg, self_cache, pos)
+        x = residual_add(x, a.astype(x.dtype))
+        if "cross" in p:
+            h = rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+            x = residual_add(x, attn.cross_attend(p["cross"], h, cache["cross"], cfg).astype(x.dtype))
+            new_cache = {"self": self_cache, "cross": cache["cross"]}
+        else:
+            new_cache = self_cache
+    delta, _ = _ffn(p, x, cfg)
+    if delta is not None:
+        x = residual_add(x, delta.astype(x.dtype))
+    return x, new_cache

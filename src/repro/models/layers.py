@@ -1,0 +1,89 @@
+"""Shared layers.  Every residual add routes through the paper's
+vector-vector primitive (``kernels.vecadd``) and every norm through the
+derived-scalar scaling kernel -- the model stack is built *out of* the
+paper's three linear-algebra classes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import rmsnorm as k_rmsnorm
+from repro.kernels import vecadd as k_vecadd
+
+
+def residual_add(x: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Paper section 5.1 vector-vector op as the residual connection."""
+    return k_vecadd(x, delta)
+
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return k_rmsnorm(x, gain, eps=eps)
+
+
+# -- dense / embedding --------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits_head(x: jnp.ndarray, table: jnp.ndarray,
+                softcap: float = 0.0) -> jnp.ndarray:
+    """x (..., d) @ table.T (V, d) -> (..., V); fp32 accumulation."""
+    out = jax.lax.dot_general(x, table, (((x.ndim - 1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if softcap:
+        out = jnp.tanh(out / softcap) * softcap
+    return out
+
+
+# -- SwiGLU MLP ---------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp(params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# -- positions ---------------------------------------------------------------
+
+def sinusoidal_positions(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Classic transformer sinusoids (whisper's position encoding)."""
+    half = d // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- losses --------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4):
+    """Token-mean CE in fp32 with optional z-loss; labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / denom

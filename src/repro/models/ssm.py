@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD, state-space duality) block -- arXiv:2405.21060.
+
+The SSD chunked algorithm is itself a statement of the paper's thesis: the
+recurrence is evaluated as *blocked matrix algebra* (intra-chunk quadratic
+attention-like matmuls + an inter-chunk recurrence on compressed states),
+so the hot loop is again the paper's matmul primitive streaming through
+VMEM-sized tiles.
+
+Layout: d_inner = expand * d_model, heads h = d_inner / headdim, single
+B/C group (G=1), state size n = cfg.ssm_state.
+
+Cache (decode): per layer
+    state (B, h, p, n)  -- the SSM state
+    conv  (B, w-1, di+2n) -- causal-conv tail
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import dispatch
+from repro.kernels.rmsnorm import ref as rmsnorm_ref
+from repro.kernels.ssd import ssd_intra
+from repro.models.config import ModelConfig
+
+
+def init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di, n, h, w = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv_width
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * di + 2 * n + h          # z, xBC, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out), jnp.float32)
+                    * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, di + 2 * n), jnp.float32)
+                   * w ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_gain": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (di, d), jnp.float32)
+                     * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: jnp.ndarray | None = None):
+    """Depthwise causal conv over (B, S, Ch); tail (B, w-1, Ch) prepends
+    history for prefill continuation.  Returns (out, new_tail)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    xfull = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xfull[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_tail = xfull[:, -(width - 1):] if width > 1 else tail
+    return jax.nn.silu(out + b[None, None].astype(out.dtype)), new_tail
+
+
+def _split(proj, cfg: ModelConfig):
+    di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a_coef, b_in, c_in, chunk: int):
+    """SSD as chunk-parallel matrix algebra + associative scan over chunks.
+
+    x (B,S,h,p), dt (B,S,h), a_coef = dt*A (B,S,h) negative, b_in/c_in
+    (B,S,n).  Returns y (B,S,h,p) and final state (B,h,p,n).
+
+    Layout (beyond-paper, EXPERIMENTS.md section Perf): every per-chunk
+    quantity carries an explicit (B, nc, ...) layout with the CHUNK dim
+    sharded over "model" (sequence parallelism for the SSM branch -- heads
+    often do not divide the model axis); the only sequential piece is a
+    log-depth associative scan over the tiny per-chunk states.  Big dot
+    inputs are bf16 with fp32 accumulation.
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    cdtype = x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_coef = jnp.pad(a_coef, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc, lc = sp // chunk, chunk
+
+    def r(t, trailing):  # (B, S, ...) -> (B, nc, lc, ...), nc sharded
+        out = t.reshape(bsz, nc, lc, *trailing)
+        return constrain(out, "batch", "model", *(None,) * (out.ndim - 2))
+
+    xc = r(x, (h, p))
+    dtc = r(dt.astype(jnp.float32), (h,))
+    ac = r(a_coef.astype(jnp.float32), (h,))
+    bc = r(b_in, (n,))
+    cc = r(c_in, (n,))
+    cum = jnp.cumsum(ac, axis=2)                           # (B, nc, lc, h)
+    xdt = (xc.astype(jnp.float32) * dtc[..., None]).astype(cdtype)
+
+    if dispatch.resolve() in ("pallas", "interpret"):
+        # fused VMEM-resident intra-chunk kernel (kernels/ssd): the
+        # (lc x lc x h) att/decay tensors never touch HBM
+        y_flat, s_flat = ssd_intra(
+            xdt.reshape(bsz * nc, lc, h, p), bc.reshape(bsz * nc, lc, n),
+            cc.reshape(bsz * nc, lc, n), cum.reshape(bsz * nc, lc, h))
+        y_intra = y_flat.reshape(bsz, nc, lc, h, p)
+        s_c = s_flat.reshape(bsz, nc, h, p, n)
+        last = cum[:, :, -1:, :]
+    else:
+        # -- intra-chunk (parallel over chunks), XLA path --------------------
+        # decay exponent masked BEFORE exp: for j > i it is positive and can
+        # overflow; a post-hoc where() would leak inf*0 = NaN into backward.
+        gbc = jax.lax.dot_general(
+            cc.astype(cdtype), bc.astype(cdtype),
+            (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)            # (B, nc, i, j)
+        diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        ii = jnp.arange(lc)
+        mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+        decay = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+        att = (gbc[..., None] * decay).astype(cdtype)      # (B, nc, i, j, h)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xdt,
+                             preferred_element_type=jnp.float32)
+
+        # per-chunk compressed state contribution
+        last = cum[:, :, -1:, :]                           # (B, nc, 1, h)
+        sdecay = jnp.exp(last - cum)                       # (B, nc, lc, h)
+        w = (xdt.astype(jnp.float32) * sdecay[..., None]).astype(cdtype)
+        s_c = jnp.einsum("bcjhp,bcjn->bchpn", w, bc.astype(cdtype),
+                         preferred_element_type=jnp.float32)
+
+    # -- inter-chunk: log-depth associative scan over chunk states -----------
+    decays = jnp.exp(last[:, :, 0])[..., None, None]       # (B, nc, h, 1, 1)
+
+    def comb(l, rgt):
+        dl, sl = l
+        dr, sr = rgt
+        return dl * dr, sl * dr + sr
+
+    dacc, states = jax.lax.associative_scan(comb, (decays, s_c), axis=1)
+    del dacc
+    state_prev = jnp.concatenate(
+        [jnp.zeros_like(states[:, :1]), states[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", cc.astype(jnp.float32),
+                         state_prev) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, sp, h, p)[:, :s]
+    return y, states[:, -1]
+
+
+def forward(params, x: jnp.ndarray, cfg: ModelConfig, *,
+            conv_tail=None, return_state: bool = False):
+    """Full-sequence SSD pass; x (B, S, d) -> y (B, S, d)."""
+    # SSD channels cannot shard over "model" (the (heads x headdim)
+    # interleaved layout breaks after the (B,S,di)->(B,S,h,p) reshape), so
+    # the SSM branch shards the SEQUENCE dim instead: in_proj/conv compute
+    # S/16 per device (conv gets its 3-token halo from XLA), matching the
+    # chunk-parallel SSD core below.
+    x = constrain(x, "batch", "model", None)
+    proj = constrain(x @ params["in_proj"], "batch", "model", None)
+    z, xbc, dt_raw = _split(proj, cfg)
+    xbc, new_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_tail)
+    xbc = constrain(xbc, "batch", "model", None)
+    di, n, h = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_headdim
+    xs = xbc[..., :di].reshape(*xbc.shape[:2], h, p)
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"])[None, None]              # (1,1,h)
+    y, state = _ssd_chunked(xs, dt, dt * a, b_in, c_in, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di)
+    y = rmsnorm_ref.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                            params["norm_gain"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["out_proj"]
+    if return_state:
+        return out, {"state": state, "conv": new_tail}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int):
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                            cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.ssm_inner + 2 * cfg.ssm_state),
+                          cfg.activation_dtype),
+    }
+
+
+def decode_step(params, x: jnp.ndarray, cfg: ModelConfig, cache: dict):
+    """One token x (B, 1, d) against recurrent state."""
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split(proj, cfg)
+    # conv via explicit tail
+    w = params["conv_w"]
+    xfull = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", xfull[:, -w.shape[0]:], w)
+    xbc1 = jax.nn.silu(conv_out + params["conv_b"][None].astype(conv_out.dtype))
+    new_conv = xfull[:, 1:] if w.shape[0] > 1 else cache["conv"]
+
+    di, n, h, p = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    xs = xbc1[..., :di].reshape(-1, h, p).astype(jnp.float32)
+    b_in = xbc1[..., di:di + n].astype(jnp.float32)
+    c_in = xbc1[..., di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         params["dt_bias"][None])           # (B, h)
+    a = -jnp.exp(params["A_log"])[None]                     # (1, h)
+    decay = jnp.exp(dt * a)                                 # (B, h)
+    state = cache["state"] * decay[:, :, None, None] + \
+        jnp.einsum("bhp,bn,bh->bhpn", xs, b_in, dt)
+    y = jnp.einsum("bn,bhpn->bhp", c_in, state) + \
+        params["D"][None, :, None] * xs
+    y = y.reshape(-1, 1, di)
+    y = rmsnorm_ref.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                            params["norm_gain"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["out_proj"]
+    return out, {"state": state, "conv": new_conv}

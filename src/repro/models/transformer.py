@@ -1,0 +1,171 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid/VLM) and the
+whisper-style encoder-decoder, all with scan-over-layers (stacked params)
+so 80-95 layer configs lower to compact HLO.
+
+Batch dict convention:
+  LM      : {"tokens": (B,S) int32, "labels": (B,S) int32}
+  VLM     : + {"patches": (B,P,d) precomputed patch embeddings (stub)}
+  enc-dec : {"frames": (B,S_enc,d) precomputed frame embeddings (stub),
+             "tokens"/"labels": decoder side}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import blocks
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    cross_entropy, embed, embed_init, logits_head, rmsnorm,
+    sinusoidal_positions,
+)
+
+_REMAT_POLICIES = {
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+}
+
+
+class Model:
+    """Functional model: params are plain pytrees, methods are pure."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = cfg.activation_dtype
+        k_emb, k_head, k_layers, k_enc = jax.random.split(key, 4)
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = embed_init(k_head, cfg.vocab_size,
+                                           cfg.d_model, dtype)
+        role = "encdec_decoder" if cfg.is_encdec else "decoder"
+        params["layers"] = jax.vmap(
+            lambda k: blocks.init(k, cfg, dtype, role))(
+                jax.random.split(k_layers, cfg.n_layers))
+        if cfg.is_encdec:
+            params["enc_layers"] = jax.vmap(
+                lambda k: blocks.init(k, cfg, dtype, "encoder"))(
+                    jax.random.split(k_enc, cfg.encoder_layers))
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        return params
+
+    # ------------------------------------------------------------- embeddings
+    def _embed_inputs(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision" and "patches" in batch:
+            p = batch["patches"].astype(x.dtype)
+            x = jnp.concatenate([p, x[:, p.shape[1]:]], axis=1)
+        if cfg.pos_embed == "sinusoidal":
+            pos = sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model)
+            x = x + pos[None].astype(x.dtype)
+        return x
+
+    def _scan(self, layers, x, body):
+        cfg = self.cfg
+        if cfg.remat in _REMAT_POLICIES:
+            body = jax.checkpoint(body, policy=_REMAT_POLICIES[cfg.remat]())
+        elif cfg.remat != "none":
+            raise ValueError(f"unknown remat policy {cfg.remat!r}")
+        return jax.lax.scan(body, x, layers)
+
+    def _encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Encoder stack over precomputed frame embeddings (audio stub)."""
+        cfg = self.cfg
+        x = frames.astype(cfg.activation_dtype)
+        pos = sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model)
+        x = x + pos[None].astype(x.dtype)
+
+        def body(carry, lp):
+            h, aux = carry
+            h, aux_l = blocks.apply(lp, h, cfg, causal=False)
+            return (h, aux + aux_l), None
+
+        (x, _), _ = self._scan(params["enc_layers"], (x, 0.0), body)
+        return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- training
+    def forward(self, params, batch):
+        """Full-sequence logits.  Returns (logits (B,S,V) fp32, aux)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+
+        def body(carry, lp):
+            h, aux = carry
+            ckv = (attn_mod.encode_kv(lp["cross"], enc_out, cfg)
+                   if cfg.is_encdec else None)
+            h, aux_l = blocks.apply(lp, h, cfg, causal=True, cross_kv=ckv)
+            return (h, aux + aux_l), None
+
+        (x, aux), _ = self._scan(params["layers"], (x, 0.0), body)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return logits_head(x, table, cfg.logit_softcap), aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + self.cfg.router_aux_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        role = "encdec_decoder" if cfg.is_encdec else "decoder"
+        one = blocks.init_cache(cfg, batch, max_len, role, enc_len)
+        return jax.tree.map(
+            lambda a: jnp.tile(a[None], (cfg.n_layers,) + (1,) * a.ndim), one)
+
+    def cache_struct(self, batch: int, max_len: int, enc_len: int = 0):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_len, enc_len))
+
+    def prefill(self, params, batch, cache):
+        """Prompt pass.  Returns (last-position logits (B, V), cache)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        enc_out = self._encode(params, batch["frames"]) if cfg.is_encdec else None
+
+        def body(h, xs):
+            lp, c = xs
+            h, c2 = blocks.prefill(lp, h, cfg, c, start=0, enc_out=enc_out)
+            return h, c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return logits_head(x, table, cfg.logit_softcap)[:, 0], new_cache
+
+    def decode(self, params, tokens, pos, cache):
+        """One step: tokens (B,) int32 at absolute position ``pos``.
+        Returns (logits (B, V), cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens[:, None])
+        if cfg.pos_embed == "sinusoidal":
+            p = sinusoidal_positions(jnp.asarray(pos).reshape(1), cfg.d_model)
+            x = x + p[None].astype(x.dtype)
+
+        def body(h, xs):
+            lp, c = xs
+            h, c2 = blocks.decode(lp, h, cfg, c, pos)
+            return h, c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return logits_head(x, table, cfg.logit_softcap)[:, 0], new_cache
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

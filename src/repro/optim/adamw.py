@@ -1,0 +1,95 @@
+"""AdamW with fp32 master weights + moments over (possibly bf16) params.
+
+Large-scale layout: params live in model dtype (bf16 on TPU) and are what
+the forward reads; the optimizer carries fp32 master/m/v, all sharded like
+the params (ZeRO-style via the sharding rules in repro.distributed).
+Weight decay applies to rank>=2 tensors only (norm gains / biases exempt,
+the usual convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params):
+    # master must be a DISTINCT buffer even for fp32 params: params and
+    # opt_state are both donated to the train step, and aliased leaves
+    # would be donated twice.
+    f32 = lambda t: jax.tree.map(
+        lambda a: jnp.array(a, jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(a.astype(jnp.float32)))
+              for a in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = warmup_cosine(step, peak_lr=cfg.peak_lr,
+                       warmup_steps=cfg.warmup_steps,
+                       total_steps=cfg.total_steps)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if master.ndim >= 2:
+            update = update + cfg.weight_decay * master
+        return m, v, master - lr * update
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    flat_p = treedef.flatten_up_to(params)
+
+    def cast(w, p):
+        c = w.astype(p.dtype)
+        if c.dtype == w.dtype:
+            # keep the params output a distinct XLA value from master, or
+            # CSE would alias the two donated-next-step output buffers
+            c = jax.lax.optimization_barrier(c)
+        return c
+
+    new_params = treedef.unflatten(
+        [cast(w, p) for w, p in zip([o[2] for o in out], flat_p)])
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,284 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes, plus hypothesis property tests on the
+transform-engine invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import kernels
+from repro.core import transform_engine as te
+from repro.kernels.flash_attention import attention_reference
+
+RNG = np.random.default_rng(42)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# affine family (paper 5.1-5.2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (7, 130), (256, 512),
+                                   (3, 5, 100), (1, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_affine_matches_ref(shape, dtype):
+    x = randn(shape, dtype)
+    s = randn((shape[-1],), dtype)
+    t = randn((shape[-1],), dtype)
+    got = kernels.affine(x, s, t, backend="interpret")
+    exp = kernels.affine(x, s, t, backend="ref")
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (33, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vecadd_matches_ref(shape, dtype):
+    x, z = randn(shape, dtype), randn(shape, dtype)
+    got = kernels.vecadd(x, z, backend="interpret")
+    np.testing.assert_allclose(np.float32(got), np.float32(x + z), **tol(dtype))
+
+
+def test_scale_is_affine_with_zero_shift():
+    x = randn((16, 128))
+    s = randn((128,))
+    np.testing.assert_allclose(
+        kernels.scale(x, s, backend="interpret"),
+        kernels.affine(x, s, jnp.zeros(()), backend="interpret"))
+
+
+# ---------------------------------------------------------------------------
+# matmul (paper 5.3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(17, 100, 33), (128, 128, 128),
+                                 (256, 1024, 512), (1, 8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(mkn, dtype):
+    m, k, n = mkn
+    x, y = randn((m, k), dtype), randn((k, n), dtype)
+    got = kernels.matmul(x, y, backend="interpret", out_dtype=jnp.float32)
+    exp = kernels.matmul(x, y, backend="ref", out_dtype=jnp.float32)
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_fp32_accumulation():
+    """bf16 inputs accumulate in fp32 (matches the oracle, not bf16 accum)."""
+    k = 4096
+    x = jnp.ones((8, k), jnp.bfloat16) * 0.01
+    y = jnp.ones((k, 128), jnp.bfloat16) * 0.01
+    got = kernels.matmul(x, y, backend="interpret", out_dtype=jnp.float32)
+    assert np.allclose(got, k * 0.01 * 0.01, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# rope (rotation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 100, 128), (2, 17, 64), (1, 8, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rope_matches_ref(shape, dtype):
+    x = randn(shape, dtype)
+    cos, sin = kernels.rope_tables(jnp.arange(shape[-2]), shape[-1])
+    got = kernels.rope(x, cos, sin, backend="interpret")
+    exp = kernels.rope(x, cos, sin, backend="ref")
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **tol(dtype))
+
+
+def test_rope_preserves_norm():
+    """Rotation is orthogonal: per-pair norms are invariant."""
+    x = randn((2, 64, 128))
+    cos, sin = kernels.rope_tables(jnp.arange(64), 128)
+    y = kernels.rope(x, cos, sin, backend="interpret")
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(33, 1600), (100, 768), (8, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = randn(shape, dtype)
+    g = randn((shape[-1],))
+    got = kernels.rmsnorm(x, g, backend="interpret")
+    exp = kernels.rmsnorm(x, g, backend="ref")
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), **tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (composite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    dict(b=2, hq=4, hkv=4, s=256, t=256),
+    dict(b=1, hq=8, hkv=2, s=130, t=130),                 # GQA + ragged
+    dict(b=1, hq=2, hkv=2, s=384, t=384, window=128),     # SWA
+    dict(b=2, hq=4, hkv=2, s=1, t=512, q_offset=511),     # decode
+    dict(b=1, hq=2, hkv=1, s=64, t=256, q_offset=192),    # chunked prefill
+])
+def test_flash_matches_oracle(case):
+    window = case.get("window")
+    q_offset = case.get("q_offset", 0)
+    q = randn((case["b"], case["hq"], case["s"], 64))
+    k = randn((case["b"], case["hkv"], case["t"], 64))
+    v = randn((case["b"], case["hkv"], case["t"], 64))
+    got = kernels.attention(q, k, v, causal=True, window=window,
+                            q_offset=q_offset, backend="interpret")
+    exp = attention_reference(q, k, v, scale=64 ** -0.5, causal=True,
+                              window=window, q_offset=q_offset)
+    np.testing.assert_allclose(got, exp, atol=1e-5)
+    blockwise = kernels.attention(q, k, v, causal=True, window=window,
+                                  q_offset=q_offset, backend="ref",
+                                  block_kv=128)
+    np.testing.assert_allclose(blockwise, exp, atol=1e-5)
+
+
+def test_flash_bf16():
+    q = randn((1, 4, 128, 64), jnp.bfloat16)
+    k = randn((1, 2, 128, 64), jnp.bfloat16)
+    v = randn((1, 2, 128, 64), jnp.bfloat16)
+    got = kernels.attention(q, k, v, backend="interpret")
+    exp = attention_reference(q, k, v, scale=64 ** -0.5)
+    np.testing.assert_allclose(np.float32(got), np.float32(exp), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis): transform-engine invariants
+# ---------------------------------------------------------------------------
+
+coords = st.floats(-100.0, 100.0, allow_nan=False, width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=32),
+       st.floats(-3.0, 3.0, allow_nan=False, width=32))
+def test_rotation_preserves_distances(pts, theta):
+    p = jnp.asarray(np.array(pts, np.float32))
+    q = te.rotate(p, theta)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(q, axis=-1), jnp.linalg.norm(p, axis=-1),
+        rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=16),
+       st.tuples(coords, coords), st.tuples(coords, coords))
+def test_translate_composes_additively(pts, t1, t2):
+    p = jnp.asarray(np.array(pts, np.float32))
+    a = te.translate(te.translate(p, jnp.asarray(t1)), jnp.asarray(t2))
+    b = te.translate(p, jnp.asarray(t1) + jnp.asarray(t2))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(coords, coords), min_size=1, max_size=16),
+       st.floats(0.1, 4.0), st.floats(0.1, 4.0),
+       st.floats(-3.0, 3.0, allow_nan=False, width=32),
+       st.tuples(coords, coords))
+def test_composite_matches_sequential(pts, sx, sy, theta, t):
+    """The paper's 'General Composite Algorithm': one homogeneous matmul
+    equals the sequential primitive applications."""
+    p = jnp.asarray(np.array(pts, np.float32))
+    tf = (te.Transform2D.identity()
+          .then_scale(sx, sy).then_rotate(theta).then_translate(*t))
+    via_matrix = tf.apply(p)
+    via_seq = te.translate(
+        te.rotate(te.scale(p, jnp.asarray([sx, sy], jnp.float32)), theta),
+        jnp.asarray(t))
+    np.testing.assert_allclose(via_matrix, via_seq, rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4))
+def test_affine_fusion_equals_two_pass(rows8, cols128):
+    """Fused y = s*x + t == scale-then-translate (two frame-buffer passes
+    on the M1, one fused pass here)."""
+    m, n = rows8 * 8, cols128 * 128
+    x = randn((m, n))
+    s = randn((n,))
+    t = randn((n,))
+    fused = kernels.affine(x, s, t, backend="interpret")
+    two_pass = kernels.translate(kernels.scale(x, s, backend="interpret"),
+                                 t, backend="interpret")
+    np.testing.assert_allclose(fused, two_pass, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper optimized paths (EXPERIMENTS.md section Perf)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    dict(b=2, hq=4, hkv=2, s=512, win=128),
+    dict(b=1, hq=5, hkv=5, s=384, win=128),     # heads not 2^k (hymba-like)
+    dict(b=1, hq=2, hkv=1, s=300, win=128),     # ragged tail
+])
+def test_banded_swa_matches_oracle(case):
+    from repro.kernels.flash_attention.ref import banded_swa_attention
+    q = randn((case["b"], case["hq"], case["s"], 64))
+    k = randn((case["b"], case["hkv"], case["s"], 64))
+    v = randn((case["b"], case["hkv"], case["s"], 64))
+    got = banded_swa_attention(q, k, v, scale=0.125, window=case["win"])
+    exp = attention_reference(q, k, v, scale=0.125, causal=True,
+                              window=case["win"])
+    np.testing.assert_allclose(got, exp, atol=1e-5)
+
+
+def test_banded_swa_grad_finite():
+    from repro.kernels.flash_attention.ref import banded_swa_attention
+    q = randn((1, 2, 256, 32))
+    k = randn((1, 2, 256, 32))
+    v = randn((1, 2, 256, 32))
+    g = jax.grad(lambda qq: banded_swa_attention(
+        qq, k, v, scale=0.17, window=128).sum())(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel (kernels/ssd)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [(3, 16, 4, 8, 8), (2, 32, 5, 16, 8),
+                                  (1, 64, 2, 32, 16)])
+def test_ssd_intra_kernel_matches_ref(dims):
+    from repro.kernels.ssd import ops as ssd_ops
+    bc, lc, h, p, n = dims
+    rng = np.random.default_rng(11)
+    xdt = jnp.asarray(rng.standard_normal((bc, lc, h, p)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((bc, lc, n)) * 0.3, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((bc, lc, n)) * 0.3, jnp.float32)
+    cum = jnp.cumsum(
+        -jnp.abs(jnp.asarray(rng.standard_normal((bc, lc, h)),
+                             jnp.float32)) * 0.1, axis=1)
+    y1, s1 = ssd_ops.ssd_intra(xdt, b, c, cum, backend="interpret")
+    y2, s2 = ssd_ops.ssd_intra(xdt, b, c, cum, backend="ref")
+    np.testing.assert_allclose(y1, y2, atol=1e-5)
+    np.testing.assert_allclose(s1, s2, atol=1e-5)
+
+
+def test_ssm_forward_kernel_backend_matches_ref_backend():
+    """Full Mamba-2 layer: interpret-mode Pallas SSD == jnp SSD path."""
+    from repro.kernels import dispatch
+    from repro.models import ssm
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=64,
+                      ssm_state=8, ssm_headdim=8, ssm_chunk=8,
+                      dtype="float32")
+    p = ssm.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32)) * 0.5
+    y_ref = ssm.forward(p, x, cfg)
+    with dispatch.use_backend("interpret"):
+        y_krn = ssm.forward(p, x, cfg)
+    np.testing.assert_allclose(np.float32(y_krn), np.float32(y_ref),
+                               atol=1e-4)

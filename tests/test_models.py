@@ -1,0 +1,198 @@
+"""Per-arch smoke tests (reduced configs) + decode/train consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build
+from repro.models.config import ModelConfig
+
+
+def _batch(cfg: ModelConfig, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_frontend_tokens, cfg.d_model)),
+            jnp.float32)
+    elif cfg.frontend == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.list_archs())
+class TestArchSmoke:
+    """One forward/train step per assigned arch on its reduced config."""
+
+    def test_train_step_shapes_and_finite(self, arch):
+        cfg = configs.get(arch).reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        logits, aux = model.forward(params, batch)
+        assert logits.shape == (2, 32, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+        loss, metrics = model.loss(params, batch)
+        assert bool(jnp.isfinite(loss))
+        grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+        assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+
+    def test_serve_path(self, arch):
+        cfg = configs.get(arch).reduced()
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        if cfg.is_encdec:
+            batch = dict(batch, tokens=batch["tokens"][:, :1])
+        cache = model.init_cache(2, 48, enc_len=32 if cfg.is_encdec else 0)
+        logits, cache = model.prefill(params, batch, cache)
+        assert logits.shape == (2, cfg.vocab_size)
+        pos = 1 if cfg.is_encdec else 32
+        logits2, cache = model.decode(
+            params, jnp.zeros((2,), jnp.int32), pos, cache)
+        assert logits2.shape == (2, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "h2o-danube-1.8b", "hymba-1.5b",
+                                  "mamba2-130m", "granite-moe-3b-a800m",
+                                  "whisper-medium", "internvl2-76b"])
+def test_decode_matches_forward(arch):
+    """Prefill+decode logits == full-sequence forward logits (per arch
+    family; catches cache/mask/rope/state bugs)."""
+    cfg = configs.get(arch).reduced()
+    cfg = dataclasses.replace(cfg, remat="none",
+                              capacity_factor=8.0)   # no MoE drops
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 24
+    batch = _batch(cfg, b, s, seed=1)
+    logits_full, _ = model.forward(params, batch)
+    sp = s - 4
+    pre = dict(batch, tokens=batch["tokens"][:, :sp])
+    if cfg.is_encdec:
+        pre["tokens"] = batch["tokens"][:, :1]
+    cache = model.init_cache(b, s, enc_len=s if cfg.is_encdec else 0)
+    lg, cache = model.prefill(params, pre, cache)
+    if cfg.is_encdec:
+        errs = []
+        for i in range(1, 6):
+            lg, cache = model.decode(params, batch["tokens"][:, i], i, cache)
+            errs.append(float(jnp.abs(lg - logits_full[:, i]).max()))
+    else:
+        errs = [float(jnp.abs(lg - logits_full[:, sp - 1]).max())]
+        for i in range(sp, s):
+            lg, cache = model.decode(params, batch["tokens"][:, i], i, cache)
+            errs.append(float(jnp.abs(lg - logits_full[:, i]).max()))
+    assert max(errs) < 2e-4, errs
+
+
+def test_param_counts_match_published_sizes():
+    expected = {
+        "internvl2-76b": (70e9, 76e9),     # LM backbone of the 76B VLM
+        "granite-moe-3b-a800m": (3.0e9, 3.6e9),
+        "dbrx-132b": (125e9, 136e9),
+        "phi3-mini-3.8b": (3.5e9, 4.0e9),
+        "deepseek-67b": (64e9, 70e9),
+        "yi-6b": (5.7e9, 6.4e9),
+        "h2o-danube-1.8b": (1.6e9, 2.0e9),
+        "hymba-1.5b": (1.3e9, 1.7e9),
+        "whisper-medium": (0.7e9, 1.1e9),  # SwiGLU FFN vs paper's GELU
+        "mamba2-130m": (0.11e9, 0.15e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = configs.get(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_below_total():
+    cfg = configs.get("granite-moe-3b-a800m")
+    assert cfg.active_param_count() < 0.4 * cfg.param_count()
+
+
+def test_ssd_chunked_equals_recurrent():
+    """Mamba-2 SSD chunked scan == naive per-token recurrence."""
+    from repro.models import ssm
+    cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=32,
+                      n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=64,
+                      ssm_state=8, ssm_headdim=8, ssm_chunk=4,
+                      dtype="float32")
+    p = ssm.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 13, 32)) * 0.5
+    y_chunked, cache = ssm.forward(p, x, cfg, return_state=True)
+    c = ssm.init_cache(cfg, 2)
+    ys = []
+    for t in range(13):
+        yt, c = ssm.decode_step(p, x[:, t:t + 1], cfg, c)
+        ys.append(yt)
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_chunked, y_rec, atol=1e-4)
+    np.testing.assert_allclose(cache["state"], c["state"], atol=1e-4)
+
+
+def test_moe_matches_per_token_oracle():
+    from repro.models import moe
+    cfg = ModelConfig(name="t", family="moe", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                      n_experts=4, experts_per_token=2, capacity_factor=8.0,
+                      dtype="float32")
+    p = moe.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = moe.moe_ffn(p, x, cfg)
+    xt = x.reshape(-1, 32)
+    logits = xt @ p["router"]
+    gv, ei = jax.lax.top_k(jax.nn.softmax(logits, -1), 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    exp = []
+    for ti in range(32):
+        acc = 0
+        for j in range(2):
+            e = int(ei[ti, j])
+            h = jax.nn.silu(xt[ti] @ p["w_gate"][e]) * (xt[ti] @ p["w_up"][e])
+            acc = acc + float(gv[ti, j]) * (h @ p["w_down"][e])
+        exp.append(acc)
+    np.testing.assert_allclose(y.reshape(-1, 32), jnp.stack(exp), atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_swa_ring_buffer_evicts_old_positions():
+    """Ring cache holds only the window; attention ignores evicted slots."""
+    cfg = configs.get("h2o-danube-1.8b").reduced()   # window 32
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 1, 48   # prompt longer than window
+    batch = _batch(cfg, b, s, seed=3)
+    logits_full, _ = model.forward(params, batch)
+    cache = model.init_cache(b, 64)
+    assert cache["kpos"].shape[-1] == cfg.window
+    lg, cache = model.prefill(params, batch, cache)
+    np.testing.assert_allclose(lg, logits_full[:, -1], atol=2e-4)
+
+
+def test_int8_kv_cache_close_to_bf16():
+    """Beyond-paper serving option: int8 KV quantization halves the cache;
+    decode logits stay close to the bf16-cache path."""
+    import dataclasses as dc
+    cfg = configs.get("yi-6b").reduced()
+    cfg = dc.replace(cfg, remat="none")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 24
+    batch = _batch(cfg, b, s, seed=7)
+    logits_full, _ = model.forward(params, batch)
+
+    cfg8 = dc.replace(cfg, kv_cache_dtype="int8")
+    model8 = build(cfg8)
+    cache = model8.init_cache(b, s + 4)
+    assert cache["k"].dtype == jnp.int8 if not isinstance(cache["k"], dict) \
+        else True
+    lg, cache = model8.prefill(params, batch, cache)
+    np.testing.assert_allclose(np.float32(lg), np.float32(logits_full[:, -1]),
+                               atol=0.15)
+    lg2, cache = model8.decode(params, batch["tokens"][:, -1], s, cache)
+    assert bool(jnp.isfinite(lg2).all())

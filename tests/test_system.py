@@ -1,0 +1,80 @@
+"""End-to-end behaviour: training convergence, serving, data determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import DataConfig, SyntheticLMData
+from repro.launch.serve import serve_batch
+from repro.launch.train import train_loop
+from repro.models import build
+
+
+def test_train_loss_decreases():
+    """20 steps on a reduced mamba2 must show a real loss drop."""
+    cfg = configs.get("mamba2-130m").reduced()
+    _, history = train_loop(cfg, steps=20, global_batch=8, seq_len=64,
+                            log_every=100)
+    first, last = np.mean(history[:3]), np.mean(history[-3:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_train_loss_decreases_dense_moe():
+    cfg = configs.get("granite-moe-3b-a800m").reduced()
+    _, history = train_loop(cfg, steps=15, global_batch=8, seq_len=64,
+                            log_every=100)
+    assert np.mean(history[-3:]) < np.mean(history[:3]) - 0.1
+
+
+def test_serve_batched_generates():
+    cfg = configs.get("yi-6b").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 16)).astype(np.int32)
+    gen = serve_batch(cfg, params, prompts, gen_tokens=8, model=model)
+    assert gen.shape == (4, 8)
+    assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+def test_serve_greedy_is_deterministic():
+    cfg = configs.get("mamba2-130m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 12)).astype(np.int32)
+    g1 = serve_batch(cfg, params, prompts, gen_tokens=6, model=model)
+    g2 = serve_batch(cfg, params, prompts, gen_tokens=6, model=model)
+    np.testing.assert_array_equal(g1, g2)
+
+
+class TestDataPipeline:
+    def test_step_seekable_determinism(self):
+        """batch(step) is a pure function -- the restart contract."""
+        cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8, seed=3)
+        d1, d2 = SyntheticLMData(cfg), SyntheticLMData(cfg)
+        for step in (0, 7, 1000):
+            b1, b2 = d1.global_batch(step), d2.global_batch(step)
+            np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_differ(self):
+        d = SyntheticLMData(DataConfig(vocab_size=100, seq_len=32,
+                                       global_batch=8))
+        assert not np.array_equal(d.global_batch(0)["tokens"],
+                                  d.global_batch(1)["tokens"])
+
+    def test_host_shards_concatenate_to_global(self):
+        d = SyntheticLMData(DataConfig(vocab_size=100, seq_len=16,
+                                       global_batch=8))
+        g = d.global_batch(5)["tokens"]
+        parts = [d.local_batch(5, h, 4)["tokens"] for h in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), g)
+
+    def test_labels_are_next_tokens_structure(self):
+        """Stream has learnable next-token structure (Markov component)."""
+        d = SyntheticLMData(DataConfig(vocab_size=97, seq_len=256,
+                                       global_batch=4))
+        b = d.global_batch(0)
+        follow = (b["tokens"] * 31 + 7) % 97
+        frac = (b["labels"] == follow).mean()
+        assert 0.3 < frac < 0.7   # ~half the transitions are deterministic

@@ -1,0 +1,43 @@
+"""Transform-engine + analysis-layer unit tests (paper sections 4-6)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analysis, transform_engine as te
+from repro.core.morphosys import intel
+
+
+def test_rotation_inverse():
+    pts = jnp.asarray(np.random.default_rng(0).standard_normal((40, 2)),
+                      jnp.float32)
+    back = te.rotate(te.rotate(pts, 0.9), -0.9)
+    np.testing.assert_allclose(back, pts, atol=1e-5)
+
+
+def test_scale_then_inverse_scale():
+    pts = jnp.asarray(np.random.default_rng(1).standard_normal((40, 2)),
+                      jnp.float32)
+    s = jnp.asarray([2.0, 4.0])
+    np.testing.assert_allclose(te.scale(te.scale(pts, s), 1.0 / s), pts,
+                               atol=1e-5)
+
+
+def test_homogeneous_identity():
+    pts = jnp.asarray(np.random.default_rng(2).standard_normal((10, 2)),
+                      jnp.float32)
+    np.testing.assert_allclose(te.Transform2D.identity().apply(pts), pts,
+                               atol=1e-6)
+
+
+def test_derive_matches_paper_columns():
+    """analysis.derive reproduces Table 5's derived columns."""
+    row = analysis.derive("translation", "m1", 64, 96)
+    assert row.elements_per_cycle == round(64 / 96, 4)   # paper: 0.667
+    assert row.total_time_us == 96 / intel.CLOCK_MHZ["m1"]  # paper: 0.96us
+    r486 = analysis.derive("translation", "80486", 64, 769, ref_cycles=96)
+    assert abs(r486.speedup_vs - 8.01) < 0.01            # paper speedup
+
+
+def test_format_table_runs():
+    rows = [analysis.derive("scaling", "m1", 64, 55)]
+    out = analysis.format_table(rows)
+    assert "scaling" in out and "55" in out

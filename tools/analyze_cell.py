@@ -1,0 +1,78 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Per-cell profile from the compiled dry-run: top HBM instructions, top
+dot FLOPs, collective breakdown with op_names -- the 'profiler' of the
+hypothesis->change->measure loop (no real TPU, so the lowered IR is the
+profile; see system prompt / DESIGN.md)."""
+import argparse
+import collections
+import re
+
+import jax
+
+from repro import hlo_analysis as H
+from repro.launch import cells
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = cells.build_cell(args.arch, args.shape, mesh)
+    text = cell.lowered.compile().as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(text)
+    mod = H.Module(text)
+
+    def opname(line):
+        m = re.search(r'op_name="([^"]+)"', line)
+        return (m.group(1)[-80:] if m else "")
+
+    mem_rows, dot_rows, coll_rows = [], [], []
+    for c in mod.computations.values():
+        m = mod.mult.get(c.name, 0)
+        if m == 0:
+            continue
+        for i in c.instrs:
+            if not c.is_fusion and i.opcode not in H.Module._SKIP_MEM \
+                    and "-done" not in i.opcode:
+                mem_rows.append((2 * mod._effective_out_bytes(i) * m, i, m))
+            if i.opcode in ("dot", "convolution"):
+                shapes = H._out_elems_dims(i.out_shape_text)
+                oe = sum(int(__import__("numpy").prod(d)) if d else 1
+                         for _, d in shapes)
+                dot_rows.append((2 * oe * mod._contraction_size(i) * m, i, m))
+            op = i.opcode[:-6] if i.opcode.endswith("-start") else i.opcode
+            if op in H.COLLECTIVES and not c.is_fusion:
+                coll_rows.append(((mod._operand_bytes(i) or i.out_bytes) * m,
+                                  i, m))
+
+    print(f"== {args.arch} x {args.shape} "
+          f"({'2x16x16' if args.multi_pod else '16x16'}) ==")
+    print(f"total hbm: {sum(r[0] for r in mem_rows)/1e12:.2f} TB | "
+          f"flops: {mod.flops()/1e12:.2f} T | "
+          f"coll: {sum(r[0] for r in coll_rows)/1e9:.1f} GB")
+    print("\n-- top HBM --")
+    for b, i, m in sorted(mem_rows, key=lambda r: -r[0])[:args.top]:
+        print(f"{b/1e9:9.1f} GB x{m:6.0f} {i.opcode:14s} "
+              f"{i.out_shape_text[:46]:<46s} {opname(i.line)}")
+    print("\n-- top dot flops --")
+    for f, i, m in sorted(dot_rows, key=lambda r: -r[0])[:args.top]:
+        print(f"{f/1e12:9.2f} T  x{m:6.0f} {i.out_shape_text[:46]:<46s} "
+              f"{opname(i.line)}")
+    print("\n-- top collectives --")
+    for b, i, m in sorted(coll_rows, key=lambda r: -r[0])[:args.top]:
+        print(f"{b/1e9:9.1f} GB x{m:6.0f} {i.opcode:22s} "
+              f"{i.out_shape_text[:40]:<40s} {opname(i.line)}")
+
+
+if __name__ == "__main__":
+    main()

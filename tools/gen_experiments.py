@@ -1,0 +1,80 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from
+results/dryrun.jsonl.  Hand-written sections (Faithful, Perf) live in
+EXPERIMENTS.md between markers and are preserved."""
+from __future__ import annotations
+
+import json
+import sys
+
+ADVICE = {
+    "memory": "fuse/keep score+gate intermediates in VMEM (Pallas) or cut "
+              "saved residual bytes (bf16 scores, recompute masks)",
+    "collective": "reduce per-microbatch weight gathers (fewer accum steps, "
+                  "quantized collectives) or switch the MoE to EP all-to-all",
+    "compute": "already compute-bound: raise MXU utilisation via larger "
+               "microbatch or fused kernels",
+}
+
+
+def load(path="results/dryrun.jsonl"):
+    recs = {}
+    for line in open(path):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    out = ["| arch | shape | kind | status | live GB/dev | compile s | "
+           "accum | collective GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {a} | {s} | - | SKIP: {r['reason'][:60]} | | | | |")
+            continue
+        b = r["bytes_per_device"]
+        out.append(
+            f"| {a} | {s} | {r['kind']} | OK | "
+            f"{b['total_live']/1e9:.1f} | {r['compile_s']} | "
+            f"{r.get('accum_steps') or '-'} | "
+            f"{r['collective_bytes_per_device']/1e9:.1f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, mesh="16x16"):
+    out = ["| arch | shape | t_compute s | t_memory s | t_collective s | "
+           "bottleneck | MODEL/HLO flops | roofline frac | what would move it |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh or r["status"] != "OK":
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {rf['t_compute']:.4f} | {rf['t_memory']:.4f} | "
+            f"{rf['t_collective']:.4f} | {rf['bottleneck']} | "
+            f"{rf['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']*100:.2f}% | "
+            f"{ADVICE[rf['bottleneck']]} |")
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    text = open("EXPERIMENTS.md").read()
+    for marker, table in [
+        ("DRYRUN_16x16", dryrun_table(recs, "16x16")),
+        ("DRYRUN_2x16x16", dryrun_table(recs, "2x16x16")),
+        ("ROOFLINE_16x16", roofline_table(recs)),
+    ]:
+        begin, end = f"<!-- BEGIN {marker} -->", f"<!-- END {marker} -->"
+        pre, rest = text.split(begin)
+        _, post = rest.split(end)
+        text = pre + begin + "\n" + table + "\n" + end + post
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
