@@ -2,24 +2,38 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus human-readable tables on the
 way).  Invoke:  PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` runs a seconds-long liveness subset (paper tables + tiny-shape
+kernel rows, roofline skipped) -- the CI pass; see benchmarks/PERF.md.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 
 
-def main() -> None:
-    # keep repo-root execution working (src layout)
-    sys.path.insert(0, "src")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few iters; CI liveness check")
+    args = ap.parse_args(argv)
+
+    # keep both `python -m benchmarks.run` and `python benchmarks/run.py`
+    # working from the repo root (src layout)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
     from benchmarks import kernel_bench, paper_tables, roofline_bench
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
     rows += paper_tables.run()
     print("\n== kernel microbenchmarks (paper primitives on the TPU mapping) ==")
-    rows += kernel_bench.run()
-    print("\n== roofline (from multi-pod dry-run) ==")
-    rows += roofline_bench.run()
+    rows += kernel_bench.run(smoke=args.smoke)
+    if not args.smoke:
+        print("\n== roofline (from multi-pod dry-run) ==")
+        rows += roofline_bench.run()
 
     print("\nname,us_per_call,derived")
     for r in rows:

@@ -9,6 +9,7 @@ applied to a point-cloud 'image', on both execution substrates:
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import transform_chain as tc
 from repro.core import transform_engine as te
 from repro.core.morphosys import programs
 
@@ -49,11 +50,23 @@ def main() -> None:
     ascii_plot(np.asarray(te.rotate(jnp.asarray(pts), np.pi / 4)),
                "rotated 45deg -- paper 5.3")
 
-    # composite: one homogeneous matmul
+    # composite: the chain compiler folds the whole pipeline into ONE
+    # fused kernel pass (the paper's General Composite Algorithm)
     tf = (te.Transform2D.identity().then_rotate(np.pi / 6)
           .then_scale(1.5, 1.5).then_translate(2.0, -1.0))
     ascii_plot(np.asarray(tf.apply(jnp.asarray(pts))),
-               "composite (rotate+scale+translate) -- one matmul")
+               "composite (rotate+scale+translate) -- one fused pass")
+    print(f"chain plan: {len(tf.chain)} primitives folded -> "
+          f"1 {tf.chain.plan_kind} kernel launch (plan cache: {tc.stats})")
+
+    # a pure translate/scale chain folds to a diagonal plan: the matrix
+    # algorithm (and the MXU) is never involved
+    diag = (tc.TransformChain.identity(2)
+            .translate(1.0, 1.0).scale(0.5, 2.0).translate(-2.0, 0.0))
+    ascii_plot(np.asarray(diag.apply(jnp.asarray(pts))),
+               "diagonal chain (translate+scale+translate) -- VPU-only plan")
+    print(f"diagonal chain: is_diagonal={diag.is_diagonal}, "
+          f"plan={diag.plan_kind}")
 
     # the same ops on the emulated M1, fixed point, with cycle counts
     fp = (pts * 100).astype(np.int16)   # Q7-ish fixed point

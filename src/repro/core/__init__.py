@@ -2,9 +2,10 @@
 
 ``morphosys``        -- faithful M1 emulator + Intel cycle models
 ``transform_engine`` -- the TPU re-expression of the mapping
+``transform_chain``  -- fused composite-chain compiler (one-pass lowering)
 ``analysis``         -- the paper's performance-analysis methodology
 """
-from repro.core import analysis, transform_engine
+from repro.core import analysis, transform_chain, transform_engine
 from repro.core import morphosys
 
-__all__ = ["analysis", "transform_engine", "morphosys"]
+__all__ = ["analysis", "transform_chain", "transform_engine", "morphosys"]

@@ -1,0 +1,309 @@
+"""Fused transform-chain compiler: the paper's one-pass composite, lazily.
+
+The paper's "General Composite Algorithm using Matrix Algorithm" collapses
+an arbitrary translate/scale/rotate pipeline into a single pass over the RC
+array.  ``TransformChain`` is that idea as a small compiler:
+
+  1. **IR** -- builder calls (``translate``/``scale``/``rotate``/``affine``/
+     ``matrix``, 2D and 3D homogeneous) record primitives only; no jnp work
+     happens until ``apply``, so composing a chain is allocation-free.
+  2. **Fold** -- the recorded chain folds algebraically: adjacent translates
+     sum, scales multiply, scale+translate fuse into one affine (s, t), and
+     anything containing a rotation or a custom matrix folds into a single
+     composed (A, t) pair.  Chains whose structure is pure-diagonal
+     (translate/scale/affine only) never build a matrix and never touch the
+     MXU.
+  3. **Lower** -- the folded chain lowers to ONE fused lane-dense Pallas
+     kernel over the flattened point buffer -- one HBM read of the points,
+     one write, with the composed parameters staged as (1, w) context-word
+     rows: ``kernels.chain_diag`` for diagonal plans, ``kernels.chain_apply``
+     (2d-1 lane-rolled multiply-adds) for general plans.
+  4. **Plan cache** -- compiled plans are cached by *chain structure* +
+     backend, and the jitted plan function takes the parameter values as
+     arguments, so the serving hot path (same chain shape, fresh parameter
+     values every request) re-folds nothing and retraces nothing.
+
+Byte economy vs. sequential primitive dispatch (k-long chain over N points
+of dim d, itemsize 4): sequential moves ~2*k*N*d*4 bytes HBM<->VMEM; the
+fused plan moves 2*N*d*4 + O(1).  ``kernels.opcount`` makes this testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch, opcount
+from repro.kernels.affine import chain_diag as _k_chain_diag
+from repro.kernels.matmul import chain_apply as _k_chain_apply
+
+# primitive kinds: T translate, S scale, R rotate, A affine(s, t), M matrix
+_DIAG_KINDS = frozenset("TSA")
+_AXES = {"x": 0, "y": 1, "z": 2}
+
+#: plan-cache / trace statistics (observable by tests and benchmarks):
+#:   compiles -- plans built (structure-level cache misses)
+#:   hits     -- plans served from the cache
+#:   traces   -- executions of a plan body under jax tracing (a cached plan
+#:               applied at a seen shape/dtype must not bump this)
+stats = {"compiles": 0, "hits": 0, "traces": 0}
+
+_PLAN_CACHE: dict[tuple, "Plan"] = {}
+
+
+def clear_plan_cache() -> None:
+    """Drop all compiled plans (benchmarks use this to measure cold cost)."""
+    _PLAN_CACHE.clear()
+
+
+def reset_stats() -> None:
+    for k in stats:
+        stats[k] = 0
+
+
+# -- folding (runs inside the traced plan body; tiny O(d^2) jnp ops) ---------
+
+def _vec(v, dim: int) -> jnp.ndarray:
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim == 0:
+        v = jnp.broadcast_to(v, (dim,))
+    return v.reshape(dim)
+
+
+def _rot(dim: int, axis: int, theta) -> jnp.ndarray:
+    """Right-multiply (row-vector) rotation matrix: q = p @ R."""
+    c = jnp.cos(jnp.asarray(theta, jnp.float32))
+    s = jnp.sin(jnp.asarray(theta, jnp.float32))
+    if dim == 2:
+        return jnp.array([[1.0, 0.0], [0.0, 1.0]]) * c + \
+            jnp.array([[0.0, 1.0], [-1.0, 0.0]]) * s
+    eye = jnp.eye(3, dtype=jnp.float32)
+    i, j = [(1, 2), (2, 0), (0, 1)][axis]   # rotation plane for axis x/y/z
+    r = eye.at[i, i].set(0).at[j, j].set(0)
+    r = r.at[i, i].add(c).at[j, j].add(c).at[i, j].add(s).at[j, i].add(-s)
+    return r
+
+
+def _mat_parts(val, dim: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split a custom-matrix param into (A (d,d), t (d,)); accepts a (d, d)
+    linear matrix or a (d+1, d+1) homogeneous one (row-vector convention)."""
+    m = jnp.asarray(val, jnp.float32)
+    if m.shape == (dim + 1, dim + 1):
+        return m[:dim, :dim], m[dim, :dim]
+    if m.shape == (dim, dim):
+        return m, jnp.zeros((dim,), jnp.float32)
+    raise ValueError(f"matrix must be ({dim},{dim}) or "
+                     f"({dim + 1},{dim + 1}); got {m.shape}")
+
+
+def _fold_diag(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a pure-diagonal chain to (s, t) with q = s (.) p + t."""
+    s = jnp.ones((dim,), jnp.float32)
+    t = jnp.zeros((dim,), jnp.float32)
+    for (kind, _), val in zip(kinds, params):
+        if kind == "T":
+            t = t + _vec(val, dim)
+        elif kind == "S":
+            v = _vec(val, dim)
+            s, t = s * v, t * v
+        else:                                   # "A": y = v*y + u
+            v, u = _vec(val[0], dim), _vec(val[1], dim)
+            s, t = s * v, t * v + u
+    return s, t
+
+
+def _fold_matrix(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a general chain to (A, t) with q = p @ A + t."""
+    a = jnp.eye(dim, dtype=jnp.float32)
+    t = jnp.zeros((dim,), jnp.float32)
+    for (kind, axis), val in zip(kinds, params):
+        if kind == "T":
+            t = t + _vec(val, dim)
+        elif kind == "S":
+            v = _vec(val, dim)
+            a, t = a * v[None, :], t * v
+        elif kind == "A":
+            v, u = _vec(val[0], dim), _vec(val[1], dim)
+            a, t = a * v[None, :], t * v + u
+        elif kind == "R":
+            r = _rot(dim, axis, val)
+            a, t = a @ r, t @ r
+        else:                                   # "M"
+            m, u = _mat_parts(val, dim)
+            a, t = a @ m, t @ m + u
+    return a, t
+
+
+# -- plans -------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A compiled chain: ``fn(params, flat_points_2d) -> out`` (jitted)."""
+    kind: str                      # "diag" | "matrix"
+    dim: int
+    backend: str
+    length: int                    # primitives folded into this plan
+    fn: typing.Callable
+
+
+def _compile(structure: tuple, backend: str) -> Plan:
+    dim, kinds = structure
+    diagonal = all(k in _DIAG_KINDS for k, _ in kinds)
+
+    if diagonal:
+        def body(params, pts2):
+            stats["traces"] += 1
+            s, t = _fold_diag(dim, kinds, params)
+            return _k_chain_diag(pts2, s, t, backend=backend)
+    else:
+        def body(params, pts2):
+            stats["traces"] += 1
+            a, t = _fold_matrix(dim, kinds, params)
+            return _k_chain_apply(pts2, a, t, backend=backend)
+
+    return Plan(kind="diag" if diagonal else "matrix", dim=dim,
+                backend=backend, length=len(kinds), fn=jax.jit(body))
+
+
+def _get_plan(structure: tuple, backend: str) -> Plan:
+    key = (structure, backend)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        stats["compiles"] += 1
+        plan = _compile(structure, backend)
+        _PLAN_CACHE[key] = plan
+    else:
+        stats["hits"] += 1
+    return plan
+
+
+# -- the chain IR ------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformChain:
+    """Lazy composite-transform IR.  Builder methods append primitives
+    without any jnp work; ``apply`` folds + lowers through the plan cache.
+
+        chain = (TransformChain.identity(dim=2)
+                 .scale(2.0, 0.5).rotate(0.3).translate(1.0, -2.0))
+        q = chain.apply(points)            # one fused kernel launch
+    """
+    dim: int
+    kinds: tuple = ()              # ((kind, axis), ...) -- the structure
+    params: tuple = ()             # raw per-primitive parameter values
+
+    @staticmethod
+    def identity(dim: int = 2) -> "TransformChain":
+        if dim not in (2, 3):
+            raise ValueError(f"dim must be 2 or 3, got {dim}")
+        return TransformChain(dim=dim)
+
+    def _push(self, kind: str, axis: int, param) -> "TransformChain":
+        return TransformChain(self.dim, self.kinds + ((kind, axis),),
+                              self.params + (param,))
+
+    def _vec_arg(self, name: str, args):
+        if len(args) == 1:
+            return args[0]
+        if len(args) != self.dim:
+            raise ValueError(f"{name} takes 1 or {self.dim} components, "
+                             f"got {len(args)}")
+        return tuple(args)
+
+    def translate(self, *t) -> "TransformChain":
+        """Append q = p + t (scalar broadcast or one component per dim)."""
+        return self._push("T", -1, self._vec_arg("translate", t))
+
+    def scale(self, *s) -> "TransformChain":
+        """Append q = s (.) p (scalar or per-dim factors)."""
+        return self._push("S", -1, self._vec_arg("scale", s))
+
+    def rotate(self, theta, axis=None) -> "TransformChain":
+        """Append a rotation by ``theta`` (radians).  3D chains name the
+        axis (0/1/2 or "x"/"y"/"z"); 2D chains take none."""
+        if self.dim == 2:
+            if axis is not None:
+                raise ValueError("2D rotations take no axis")
+            return self._push("R", -1, theta)
+        if axis is None:
+            raise ValueError("3D rotations need axis= (0/1/2 or x/y/z)")
+        ax = _AXES.get(axis, axis)
+        if ax not in (0, 1, 2):
+            raise ValueError(f"bad rotation axis {axis!r}")
+        return self._push("R", ax, theta)
+
+    def affine(self, s, t) -> "TransformChain":
+        """Append the fused q = s (.) p + t (scalars or per-dim vectors)."""
+        return self._push("A", -1, (s, t))
+
+    def matrix(self, m) -> "TransformChain":
+        """Append a custom (d, d) linear or (d+1, d+1) homogeneous matrix
+        (row-vector convention: q = [p, 1] @ M)."""
+        return self._push("M", -1, m)
+
+    # -- introspection -------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.kinds)
+
+    @property
+    def structure(self) -> tuple:
+        """Hashable plan-cache key component: dims + primitive kinds/axes
+        (parameter *values* are plan operands, not part of the key)."""
+        return (self.dim, self.kinds)
+
+    @property
+    def is_diagonal(self) -> bool:
+        """True if the folded chain is diagonal (never touches the MXU)."""
+        return all(k in _DIAG_KINDS for k, _ in self.kinds)
+
+    @property
+    def plan_kind(self) -> str:
+        """The plan class this structure lowers to: "diag" (VPU-only
+        fused affine) or "matrix" (lane-rolled q = p @ A + t)."""
+        return "diag" if self.is_diagonal else "matrix"
+
+    def folded(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Eagerly fold to the composed (A (d,d), t (d,)) pair."""
+        if self.is_diagonal:
+            s, t = _fold_diag(self.dim, self.kinds, self.params)
+            return jnp.diag(s), t
+        return _fold_matrix(self.dim, self.kinds, self.params)
+
+    def as_homogeneous(self) -> jnp.ndarray:
+        """The composed (d+1, d+1) homogeneous matrix (row-vector form)."""
+        a, t = self.folded()
+        d = self.dim
+        h = jnp.zeros((d + 1, d + 1), jnp.float32)
+        h = h.at[:d, :d].set(a).at[d, :d].set(t).at[d, d].set(1.0)
+        return h
+
+    # -- execution -----------------------------------------------------------
+
+    def _plan(self, backend: str | None) -> Plan:
+        return _get_plan(self.structure, dispatch.resolve(backend))
+
+    def apply(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+        """Apply the folded chain to (..., d) points in one fused pass."""
+        d = points.shape[-1]
+        if d != self.dim:
+            raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
+        if not self.kinds:
+            return points
+        plan = self._plan(backend)
+        flat = points.reshape(-1, d)
+        param_bytes = 4 * (d * d + d)           # composed (A, t) operands
+        opcount.record(f"chain_fused_{plan.kind}",
+                       2 * flat.nbytes + param_bytes)
+        out = plan.fn(self.params, flat)
+        return out.reshape(points.shape)
+
+    def apply_many(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+        """Map one compiled plan over a leading batch axis: (B, ..., d) in,
+        (B, ..., d) out, still a single fused kernel launch (the batch is
+        part of the flattened point buffer, not a loop of launches)."""
+        if points.ndim < 3:
+            raise ValueError("apply_many expects (B, ..., d) with ndim >= 3")
+        return self.apply(points, backend=backend)

@@ -9,6 +9,24 @@ dispatched to the corresponding Pallas kernel on TPU (ref oracle on CPU).
 Points are row vectors (..., 2) in 2D (or (..., 3) homogeneous), so a
 composite transform chain is a single right-multiplied matrix product --
 exactly the paper's "General Composite Algorithm using Matrix Algorithm".
+
+Composite transforms
+--------------------
+Composites are compiled, not interpreted: ``Transform2D``/``Transform3D``
+are thin builders over :class:`repro.core.transform_chain.TransformChain`,
+the paper's one-pass composite as a small chain compiler.  Builder calls
+(``then_translate``/``then_scale``/``then_rotate``) only append to a lazy
+IR -- no 3x3 matmuls, no allocation.  At ``apply`` the chain folds
+algebraically (adjacent translates sum, scales multiply, scale+translate
+fuse into one affine; pure-diagonal chains never touch the MXU) and lowers
+to a single fused lane-dense Pallas kernel: one HBM read of the points and
+one write for the *whole* chain, versus one read+write per primitive under
+sequential dispatch.  Compiled plans are cached by chain structure +
+backend, so the serving hot path (same chain shape, fresh parameter values
+per request) neither re-folds nor retraces; ``TransformChain.apply_many``
+maps one cached plan over a leading batch axis in one launch.  See
+``benchmarks/PERF.md`` for the measured byte economy (the ``chain_*``
+benchmark rows).
 """
 from __future__ import annotations
 
@@ -16,8 +34,8 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.core.transform_chain import TransformChain
 from repro.kernels import affine as k_affine
-from repro.kernels import matmul as k_matmul
 from repro.kernels import rotate2d as k_rotate2d
 from repro.kernels import scale as k_scale
 from repro.kernels import translate as k_translate
@@ -56,31 +74,68 @@ def vecadd(u: jnp.ndarray, v: jnp.ndarray, *, backend=None) -> jnp.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class Transform2D:
-    """Homogeneous 3x3 transform composed right-to-left like the paper's
-    matrix algorithm; applying it is one matmul on the array."""
-    matrix: jnp.ndarray  # (3, 3)
+    """Homogeneous 2D transform composed right-to-left like the paper's
+    matrix algorithm.  Builders are lazy (IR append only); ``apply`` runs
+    the folded chain as one fused kernel pass via the plan cache."""
+    chain: TransformChain
 
     @staticmethod
     def identity() -> "Transform2D":
-        return Transform2D(jnp.eye(3, dtype=jnp.float32))
+        return Transform2D(TransformChain.identity(2))
+
+    @staticmethod
+    def from_matrix(m: jnp.ndarray) -> "Transform2D":
+        """Wrap an explicit (3, 3) homogeneous matrix (row-vector form)."""
+        return Transform2D(TransformChain.identity(2).matrix(m))
 
     def then_translate(self, tx, ty) -> "Transform2D":
-        m = jnp.array([[1, 0, 0], [0, 1, 0], [tx, ty, 1]], jnp.float32)
-        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+        return Transform2D(self.chain.translate(tx, ty))
 
     def then_scale(self, sx, sy) -> "Transform2D":
-        m = jnp.array([[sx, 0, 0], [0, sy, 0], [0, 0, 1]], jnp.float32)
-        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+        return Transform2D(self.chain.scale(sx, sy))
 
     def then_rotate(self, theta) -> "Transform2D":
-        c, s = jnp.cos(theta), jnp.sin(theta)
-        m = jnp.array([[c, s, 0], [-s, c, 0], [0, 0, 1]], jnp.float32)
-        return Transform2D(k_matmul(self.matrix, m, backend="ref"))
+        return Transform2D(self.chain.rotate(theta))
+
+    @property
+    def matrix(self) -> jnp.ndarray:
+        """The composed (3, 3) homogeneous matrix (materialised on demand;
+        building it is no longer part of the apply path)."""
+        return self.chain.as_homogeneous()
 
     def apply(self, points: jnp.ndarray, *, backend=None) -> jnp.ndarray:
-        """points (..., 2) -> (..., 2) via one homogeneous matmul."""
-        flat = points.reshape(-1, 2)
-        ones = jnp.ones((flat.shape[0], 1), points.dtype)
-        homo = jnp.concatenate([flat, ones], axis=-1)
-        out = k_matmul(homo, self.matrix.astype(points.dtype), backend=backend)
-        return out[:, :2].reshape(points.shape)
+        """points (..., 2) -> (..., 2) in one fused HBM pass."""
+        return self.chain.apply(points, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class Transform3D:
+    """3D homogeneous composite on (..., 3) points; same lazy chain IR and
+    fused one-pass lowering as :class:`Transform2D` (the companion paper's
+    MorphoSys 3D pipeline mapping)."""
+    chain: TransformChain
+
+    @staticmethod
+    def identity() -> "Transform3D":
+        return Transform3D(TransformChain.identity(3))
+
+    @staticmethod
+    def from_matrix(m: jnp.ndarray) -> "Transform3D":
+        """Wrap an explicit (4, 4) homogeneous matrix (row-vector form)."""
+        return Transform3D(TransformChain.identity(3).matrix(m))
+
+    def then_translate(self, tx, ty, tz) -> "Transform3D":
+        return Transform3D(self.chain.translate(tx, ty, tz))
+
+    def then_scale(self, sx, sy, sz) -> "Transform3D":
+        return Transform3D(self.chain.scale(sx, sy, sz))
+
+    def then_rotate(self, theta, axis) -> "Transform3D":
+        return Transform3D(self.chain.rotate(theta, axis=axis))
+
+    @property
+    def matrix(self) -> jnp.ndarray:
+        return self.chain.as_homogeneous()
+
+    def apply(self, points: jnp.ndarray, *, backend=None) -> jnp.ndarray:
+        return self.chain.apply(points, backend=backend)

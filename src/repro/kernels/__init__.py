@@ -7,19 +7,26 @@
   flash_attention -- streaming composite transform (beyond paper)
   ssd             -- Mamba-2 intra-chunk core, VMEM-resident (beyond paper)
 
+Composite-chain lowering targets (the paper's one-pass "General Composite
+Algorithm"): ``chain_diag`` (folded diagonal chains, VPU-only) and
+``chain_apply`` (folded general chains, lane-rolled q = p @ A + t); both
+are single-HBM-pass kernels over the flattened point buffer and are what
+``repro.core.transform_chain`` compiles to.
+
 Every family ships ``ops.py`` (public entry, backend-dispatched) and
-``ref.py`` (pure-jnp oracle).  See ``repro.kernels.dispatch``.
+``ref.py`` (pure-jnp oracle).  See ``repro.kernels.dispatch``; HBM byte
+accounting for perf tests lives in ``repro.kernels.opcount``.
 """
-from repro.kernels import dispatch
-from repro.kernels.affine import affine, scale, translate, vecadd
+from repro.kernels import dispatch, opcount
+from repro.kernels.affine import affine, chain_diag, scale, translate, vecadd
 from repro.kernels.flash_attention import attention, blockwise_attention
-from repro.kernels.matmul import matmul, rotate2d
+from repro.kernels.matmul import chain_apply, matmul, rotate2d
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rope import rope, rope_tables
 from repro.kernels.ssd import ssd_intra
 
 __all__ = [
-    "dispatch", "affine", "scale", "translate", "vecadd", "attention",
-    "blockwise_attention", "matmul", "rotate2d", "rmsnorm", "rope",
-    "rope_tables", "ssd_intra",
+    "dispatch", "opcount", "affine", "chain_diag", "scale", "translate",
+    "vecadd", "attention", "blockwise_attention", "chain_apply", "matmul",
+    "rotate2d", "rmsnorm", "rope", "rope_tables", "ssd_intra",
 ]

@@ -1,3 +1,3 @@
-from repro.kernels.affine.ops import affine, scale, translate, vecadd
+from repro.kernels.affine.ops import affine, chain_diag, scale, translate, vecadd
 
-__all__ = ["affine", "scale", "translate", "vecadd"]
+__all__ = ["affine", "chain_diag", "scale", "translate", "vecadd"]

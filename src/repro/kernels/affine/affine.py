@@ -5,13 +5,19 @@ becomes the kernel body, the column broadcast becomes the grid, and the
 double-banked frame buffer becomes the (automatically double-buffered)
 HBM->VMEM block pipeline that `BlockSpec` index maps describe.
 
-Two bodies cover all four public ops:
+Three bodies cover the public ops:
 
   * ``_affine_kernel``  -- y = s (.) x + t with s, t broadcast row
     parameters staged once per column block (the "context word immediate"
     of Table 2, generalised from a scalar to a (1, bn) vector);
   * ``_vecadd_kernel``  -- y = x (+) z elementwise, both operands streamed
-    through the double-buffered pipeline (Table 1's dbcdc).
+    through the double-buffered pipeline (Table 1's dbcdc);
+  * ``_chain_diag_kernel`` -- the folded *diagonal* transform chain
+    y[j] = s[j mod d] * x[j] + t[j mod d] over the flattened (N, d) point
+    buffer.  The per-coordinate scale/shift pattern is tiled across the
+    lane axis host-side, so an arbitrary translate/scale/affine chain is
+    one lane-dense VPU pass: one HBM read of the points, one write, no
+    per-point lane padding and no MXU involvement.
 """
 from __future__ import annotations
 
@@ -21,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.util import LANES, SUBLANES, cdiv, pad2d, pick_block
+from repro.kernels.util import LANES, SUBLANES, pad2d, pick_block, stage_flat
 
 
 def _affine_kernel(x_ref, s_ref, t_ref, o_ref):
@@ -59,6 +65,42 @@ def affine_2d(x: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
         interpret=interpret,
     )(xp, sp, tp)
     return out[:m, :n]
+
+
+def _chain_diag_kernel(x_ref, s_ref, t_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[...] + t_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+def chain_diag_1d(flat: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
+                  *, d: int, interpret: bool = False) -> jnp.ndarray:
+    """Folded diagonal chain on the flat point buffer: y = s*x + t per coord.
+
+    ``flat`` is an (N*d,) view of an (N, d) point array; ``s``/``t`` are
+    (d,) per-coordinate parameters.  The buffer is reshaped to rows of
+    ``w = chain_width(d)`` lanes (w a multiple of d, so points never
+    straddle a block edge) and the d-periodic parameter pattern is tiled
+    into (1, w) context-word rows staged once per block.
+    """
+    (l,) = flat.shape
+    if l == 0:
+        return flat
+    xp, lane_coord, bm, w = stage_flat(flat, d)
+    srow = s.astype(flat.dtype)[lane_coord].reshape(1, w)
+    trow = t.astype(flat.dtype)[lane_coord].reshape(1, w)
+    out = pl.pallas_call(
+        _chain_diag_kernel,
+        out_shape=jax.ShapeDtypeStruct(xp.shape, flat.dtype),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),   # context-word params
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        interpret=interpret,
+    )(xp, srow, trow)
+    return out.reshape(-1)[:l]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

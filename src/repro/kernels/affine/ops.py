@@ -2,13 +2,15 @@
 
 Shape-polymorphic wrappers: inputs of any rank are flattened to (M, N) with
 N = trailing dim; row parameters may be scalars or (N,) vectors.  Backend
-dispatch per ``repro.kernels.dispatch``.
+dispatch per ``repro.kernels.dispatch``; every entry records its HBM byte
+volume through ``repro.kernels.opcount`` so byte-economy claims (sequential
+vs fused chains) are testable.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import dispatch
+from repro.kernels import dispatch, opcount
 from repro.kernels.affine import affine as K
 from repro.kernels.affine import ref
 
@@ -24,10 +26,11 @@ def affine(x: jnp.ndarray, s, t, *, backend: str | None = None) -> jnp.ndarray:
     """y = s*x + t -- the fused translation+scaling composite.
 
     ``s``/``t`` are scalars or (N,) vectors over the trailing dim of x."""
+    n = x.shape[-1]
+    opcount.record("affine", 2 * x.nbytes + 2 * n * x.dtype.itemsize)
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.affine(x, s, t)
-    n = x.shape[-1]
     x2 = x.reshape(-1, n)
     out = K.affine_2d(x2, _as_row(s, n, x.dtype), _as_row(t, n, x.dtype),
                       interpret=(b == "interpret"))
@@ -47,6 +50,7 @@ def translate(x: jnp.ndarray, t, *, backend: str | None = None) -> jnp.ndarray:
 def vecadd(x: jnp.ndarray, z: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
     """y = x + z elementwise (Table 1; residual-add in the model stack)."""
     assert x.shape == z.shape, (x.shape, z.shape)
+    opcount.record("vecadd", 3 * x.nbytes)
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.vecadd(x, z)
@@ -54,3 +58,25 @@ def vecadd(x: jnp.ndarray, z: jnp.ndarray, *, backend: str | None = None) -> jnp
     out = K.vecadd_2d(x.reshape(-1, n), z.reshape(-1, n),
                       interpret=(b == "interpret"))
     return out.reshape(x.shape)
+
+
+def chain_diag(points: jnp.ndarray, s, t, *,
+               backend: str | None = None) -> jnp.ndarray:
+    """Folded diagonal transform chain q = s (.) p + t in one fused pass.
+
+    ``points`` is (..., d); ``s``/``t`` are scalars or (d,) per-coordinate
+    parameters.  Lowered to the lane-dense ``chain_diag_1d`` kernel: one
+    HBM read of the points, one write, never touches the MXU.  This is
+    the lowering target for diagonal ``TransformChain`` plans; byte
+    accounting for the chain as a whole happens in ``TransformChain.apply``
+    (this entry is called under jit inside the compiled plan).
+    """
+    b = dispatch.resolve(backend)
+    d = points.shape[-1]
+    s = jnp.broadcast_to(jnp.asarray(s, points.dtype), (d,))
+    t = jnp.broadcast_to(jnp.asarray(t, points.dtype), (d,))
+    if b == "ref":
+        return ref.chain_diag(points, s, t)
+    out = K.chain_diag_1d(points.reshape(-1), s, t, d=d,
+                          interpret=(b == "interpret"))
+    return out.reshape(points.shape)

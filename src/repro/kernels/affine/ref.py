@@ -21,3 +21,9 @@ def translate(p: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
 def scale(p: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
     """q = S x p with diagonal S (paper section 4, Scaling)."""
     return (p * jnp.asarray(s, p.dtype)).astype(p.dtype)
+
+
+def chain_diag(p: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Folded diagonal transform chain: q = s (.) p + t, s/t (d,) rows
+    broadcast over (..., d) points -- the one-pass composite oracle."""
+    return affine(p, s, t)

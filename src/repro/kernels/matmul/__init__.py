@@ -1,3 +1,3 @@
-from repro.kernels.matmul.ops import matmul, rotate2d
+from repro.kernels.matmul.ops import chain_apply, matmul, rotate2d
 
-__all__ = ["matmul", "rotate2d"]
+__all__ = ["chain_apply", "matmul", "rotate2d"]

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.util import LANES, SUBLANES, pad_axis, pick_block
+from repro.kernels.util import (LANES, SUBLANES, CompilerParams, pad_axis,
+                                pick_block, stage_flat)
 
 
 def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
@@ -62,8 +63,65 @@ def matmul_2d(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 128, bn: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, yp)
     return out[:m, :n]
+
+
+# -- fused transform-chain kernel (the paper's one-pass composite) -----------
+#
+# A folded chain q = p @ A + t over (N, d) points with d in {2, 3} would
+# waste 128/d of the lane bandwidth if lowered through the tiled matmul
+# (the trailing dim pads 2 -> 128).  Instead the point buffer is kept
+# flat and lane-dense: flat index j = point*d + coord, and
+#
+#   out[j] = sum_m x[point*d + m] * A[m, c] + t[c],   c = j mod d,
+#
+# becomes 2d-1 lane-rolled multiply-adds against precomputed d-periodic
+# coefficient rows C_delta[j] = A[c+delta, c] (zero where c+delta falls
+# outside [0, d)).  Rolls never mix points because chain_width(d) is a
+# multiple of d, and wrapped lanes always carry a zero coefficient.  One
+# HBM read of the points, one write, pure VPU work.
+
+def _chain_matrix_kernel(x_ref, c_ref, t_ref, o_ref, *, d: int):
+    x = x_ref[...]
+    c = c_ref[...]
+    acc = jnp.zeros_like(x) + t_ref[...]
+    for i, delta in enumerate(range(-(d - 1), d)):
+        acc = acc + jnp.roll(x, -delta, axis=1) * c[i:i + 1, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+def chain_matrix_1d(flat: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
+                    *, d: int, interpret: bool = False) -> jnp.ndarray:
+    """Fused q = p @ A + t on the flat (N*d,) point buffer; A (d, d), t (d,)."""
+    (l,) = flat.shape
+    if l == 0:
+        return flat
+    xp, lane_coord, bm, w = stage_flat(flat, d)
+    a = a.astype(flat.dtype)
+    coef_rows = []
+    for delta in range(-(d - 1), d):
+        src = lane_coord + delta
+        valid = (src >= 0) & (src < d)
+        coef_rows.append(jnp.where(valid,
+                                   a[jnp.clip(src, 0, d - 1), lane_coord],
+                                   jnp.zeros((), flat.dtype)))
+    coef = pad_axis(jnp.stack(coef_rows), 0, SUBLANES)      # (8, w)
+    trow = t.astype(flat.dtype)[lane_coord].reshape(1, w)
+    out = pl.pallas_call(
+        functools.partial(_chain_matrix_kernel, d=d),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, flat.dtype),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANES, w), lambda i: (0, 0)),  # coefficient rows
+            pl.BlockSpec((1, w), lambda i: (0, 0)),         # translation row
+        ],
+        out_specs=pl.BlockSpec((bm, w), lambda i: (i, 0)),
+        interpret=interpret,
+    )(xp, coef, trow)
+    return out.reshape(-1)[:l]

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels import dispatch
+from repro.kernels import dispatch, opcount
 from repro.kernels.matmul import matmul as K
 from repro.kernels.matmul import ref
 
@@ -11,6 +11,9 @@ from repro.kernels.matmul import ref
 def matmul(x: jnp.ndarray, y: jnp.ndarray, *, backend: str | None = None,
            out_dtype=None, bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
     """C = X @ Y with fp32 accumulation; X rank >= 2 (leading dims batched)."""
+    out_itemsize = jnp.dtype(out_dtype or x.dtype).itemsize
+    out_elems = x.size // x.shape[-1] * y.shape[-1]
+    opcount.record("matmul", x.nbytes + y.nbytes + out_elems * out_itemsize)
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.matmul(x, y, out_dtype=out_dtype)
@@ -28,3 +31,26 @@ def rotate2d(points: jnp.ndarray, theta, *, backend: str | None = None) -> jnp.n
     c, s = jnp.cos(theta), jnp.sin(theta)
     rot = jnp.array([[c, s], [-s, c]], points.dtype)  # right-multiply form
     return matmul(points.reshape(-1, 2), rot, backend=backend).reshape(points.shape)
+
+
+def chain_apply(points: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
+                backend: str | None = None) -> jnp.ndarray:
+    """Folded transform chain q = p @ A + t in one fused pass.
+
+    ``points`` is (..., d); ``a`` is the composed (d, d) linear part and
+    ``t`` the composed (d,) translation.  Lowered to the lane-dense
+    ``chain_matrix_1d`` kernel (2d-1 rolled multiply-adds on the flat
+    buffer): one HBM read of the points, one write, no homogeneous-column
+    materialisation and no 128-lane padding of the d-wide trailing axis.
+    Lowering target for general ``TransformChain`` plans; chain-level byte
+    accounting happens in ``TransformChain.apply``.
+    """
+    b = dispatch.resolve(backend)
+    d = points.shape[-1]
+    a = jnp.asarray(a)
+    t = jnp.asarray(t)
+    if b == "ref":
+        return ref.chain_matrix(points, a, t)
+    out = K.chain_matrix_1d(points.reshape(-1), a, t, d=d,
+                            interpret=(b == "interpret"))
+    return out.reshape(points.shape)

@@ -10,3 +10,26 @@ def matmul(x: jnp.ndarray, y: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
     acc = jax.lax.dot_general(x, y, (((x.ndim - 1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     return acc.astype(out_dtype)
+
+
+def chain_matrix(p: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Folded transform chain q = p @ A + t for (..., d) points; A (d, d),
+    t (d,) -- the one-pass composite oracle (fp32 accumulation).
+
+    For the point dims that occur in practice (d <= 4) the contraction is
+    unrolled into d^2 fused multiply-adds: a (N, 2) @ (2, 2) dot_general is
+    a degenerate matmul that XLA CPU executes far slower than the
+    equivalent elementwise expression, and the unrolled form fuses into
+    the single memory pass the fused chain is meant to be."""
+    a = jnp.asarray(a, jnp.float32)
+    t = jnp.asarray(t, jnp.float32)
+    d = p.shape[-1]
+    if d <= 4:
+        pf = p.astype(jnp.float32)
+        cols = [sum(pf[..., m] * a[m, c] for m in range(d)) + t[c]
+                for c in range(d)]
+        return jnp.stack(cols, axis=-1).astype(p.dtype)
+    acc = jax.lax.dot_general(p, a.astype(p.dtype),
+                              (((p.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return (acc + t).astype(p.dtype)

@@ -1,0 +1,42 @@
+"""HBM-traffic accounting for the eager kernel-dispatch path.
+
+The paper's central perf argument is byte economy: a composite transform
+that runs as one pass over the RC array moves (k+1)x fewer frame-buffer
+bytes than k sequential primitive passes.  This module makes the same
+accounting observable on the TPU mapping: every public op entry records
+``(op_name, bytes_moved)`` -- bytes read from plus written to HBM under
+the memory-bound model (inputs + outputs, parameters included) -- while a
+``counting()`` scope is active.
+
+Records fire when the op *entry* executes, i.e. on every call on the
+eager path but only once (at trace time) under ``jax.jit``.  That is the
+intended use: tests and benchmarks compare eager sequential dispatch
+against the fused chain path, whose single record is emitted by
+``TransformChain.apply`` outside the jitted plan.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_ACTIVE: list[tuple[str, int]] | None = None
+
+
+@contextlib.contextmanager
+def counting():
+    """Collect ``(op, nbytes)`` records emitted inside the scope."""
+    global _ACTIVE
+    prev, records = _ACTIVE, []
+    _ACTIVE = records
+    try:
+        yield records
+    finally:
+        _ACTIVE = prev
+
+
+def record(op: str, nbytes: int) -> None:
+    if _ACTIVE is not None:
+        _ACTIVE.append((op, int(nbytes)))
+
+
+def total_bytes(records: list[tuple[str, int]]) -> int:
+    return sum(b for _, b in records)

@@ -7,10 +7,17 @@ and slice back so the public API stays shape-polymorphic.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 SUBLANES = 8
+
+#: version-portable Pallas-TPU compiler params (renamed across jax versions)
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
 
 
 def round_up(x: int, m: int) -> int:
@@ -26,6 +33,36 @@ def pick_block(dim: int, preferred: int, align: int) -> int:
     if dim <= preferred:
         return round_up(dim, align)
     return preferred
+
+
+def chain_width(d: int, target: int = 512) -> int:
+    """Lane width for the flattened point-buffer chain kernels.
+
+    The fused transform-chain kernels view an (N, d) point array as one
+    flat buffer reshaped to rows of ``w`` lanes, so ``w`` must be a
+    multiple of both the lane count (alignment) and ``d`` (no point may
+    straddle a row/block edge).  The smallest such width is
+    lcm(d, LANES), scaled up toward ``target`` lanes per row.
+    """
+    base = d * LANES // math.gcd(d, LANES)
+    return base * max(1, target // base)
+
+
+def stage_flat(flat: jnp.ndarray, d: int):
+    """Stage a flat (N*d,) point buffer for the chain kernels: pad and
+    reshape to (rows_p, w) blocks of ``w = chain_width(d)`` lanes and
+    return ``(xp, lane_coord, bm, w)`` where ``lane_coord[j] = j % d`` is
+    the coordinate index of each lane (for building d-periodic parameter
+    rows).  Shared by ``chain_diag_1d`` and ``chain_matrix_1d`` so the
+    blocking/padding discipline cannot diverge between them."""
+    (l,) = flat.shape
+    w = chain_width(d)
+    rows = cdiv(l, w)
+    bm = pick_block(rows, 256, SUBLANES)
+    rows_p = round_up(rows, bm)
+    xp = jnp.pad(flat, (0, rows_p * w - l)).reshape(rows_p, w)
+    lane_coord = jnp.arange(w) % d
+    return xp, lane_coord, bm, w
 
 
 def pad_axis(x: jnp.ndarray, axis: int, multiple: int,

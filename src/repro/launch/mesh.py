@@ -5,19 +5,33 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes, *, devices=None):
+    """Version-portable ``jax.make_mesh``: newer jax wants explicit
+    ``axis_types`` (Auto) for the sharding pass; older jax (< AxisType)
+    takes neither the kwarg nor the enum."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def mesh_context(mesh):
+    """Version-portable ``jax.sharding.set_mesh``: on older jax the Mesh
+    object itself is the context manager that scopes named-axis resolution."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; 2x16x16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_axis: int = 1):
     """Dev/test mesh over whatever devices exist (CPU included)."""
     n = len(jax.devices())
     assert n % model_axis == 0, (n, model_axis)
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -29,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import ambient_mesh, shard_map
 from repro.models.config import ModelConfig
 
 
@@ -120,7 +121,7 @@ def _moe_local(router, w_gate, w_up, w_down, x, cfg: ModelConfig,
 
 def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig):
     """x (B, S, d) -> (y (B, S, d), aux scalar); shard_mapped under a mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_mesh()
     if mesh is None or not mesh.axis_names:
         return _moe_local(params["router"], params["w_gate"], params["w_up"],
                           params["w_down"], x, cfg, tp_axis=None)
@@ -144,7 +145,7 @@ def moe_ffn(params, x: jnp.ndarray, cfg: ModelConfig):
             aux = jax.lax.pmean(aux, tp)  # identical, but align replication
         return y, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None), ff_spec, ff_spec, ff_spec_down, batch_spec),
         out_specs=(batch_spec, P()), check_vma=False)

@@ -25,9 +25,9 @@ def test_cell_lowers_and_compiles_on_small_mesh():
     out = _run("""
         import jax, json
         from repro.launch import cells
+        from repro.launch.mesh import make_mesh
         from repro import hlo_analysis
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         # full-size configs are exercised by the real dry-run; here a small
         # arch proves the machinery under pytest time budgets.
         cell = cells.build_cell("mamba2-130m", "decode_32k", mesh)
@@ -50,9 +50,9 @@ def test_train_step_lowers_multipod_axes():
     out = _run("""
         import jax, json
         from repro.launch import cells
+        from repro.launch.mesh import make_mesh
         from repro import hlo_analysis
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cell = cells.build_cell("hymba-1.5b", "decode_32k", mesh)
         comp = cell.lowered.compile()
         ana = hlo_analysis.analyze(comp.as_text())
@@ -70,18 +70,16 @@ def test_elastic_shrink_resume():
         import numpy as np
         from repro import configs
         from repro.launch.train import train_loop
-        from repro.launch.mesh import make_local_mesh
+        from repro.launch.mesh import make_mesh
 
         cfg = configs.get("mamba2-130m").reduced()
         d = tempfile.mkdtemp()
-        mesh8 = jax.make_mesh((8, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh8 = make_mesh((8, 1), ("data", "model"))
         _, h1 = train_loop(cfg, steps=6, global_batch=8, seq_len=64,
                            mesh=mesh8, ckpt_dir=d, ckpt_interval=3,
                            log_every=100, seed=5)
-        mesh4 = jax.make_mesh((4, 1), ("data", "model"),
-                              devices=jax.devices()[:4],
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh4 = make_mesh((4, 1), ("data", "model"),
+                          devices=jax.devices()[:4])
         _, h2 = train_loop(cfg, steps=10, global_batch=8, seq_len=64,
                            mesh=mesh4, ckpt_dir=d, resume=True,
                            ckpt_interval=3, log_every=100, seed=5)

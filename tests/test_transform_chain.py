@@ -1,0 +1,308 @@
+"""Fused transform-chain compiler tests: random composite chains against a
+sequential per-primitive oracle (deterministic property-style sweeps), the
+plan-cache no-retrace guarantee, and the one-HBM-pass byte economy.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import transform_chain as tc
+from repro.core import transform_engine as te
+from repro.kernels import opcount
+
+RNG = np.random.default_rng(7)
+
+
+def _rot_row(dim, axis, theta):
+    """Independent right-multiply rotation matrix for the oracle."""
+    c, s = np.cos(theta), np.sin(theta)
+    if dim == 2:
+        return np.array([[c, s], [-s, c]], np.float32)
+    m = np.eye(3, dtype=np.float32)
+    i, j = [(1, 2), (2, 0), (0, 1)][axis]
+    m[i, i] = m[j, j] = c
+    m[i, j], m[j, i] = s, -s
+    return m
+
+
+def _sequential_oracle(chain: tc.TransformChain, pts: np.ndarray) -> np.ndarray:
+    """Apply the chain one primitive at a time in float64 numpy."""
+    q = np.asarray(pts, np.float64)
+    d = chain.dim
+    for (kind, axis), val in zip(chain.kinds, chain.params):
+        if kind == "T":
+            q = q + np.broadcast_to(np.asarray(val, np.float64), (d,))
+        elif kind == "S":
+            q = q * np.broadcast_to(np.asarray(val, np.float64), (d,))
+        elif kind == "A":
+            s = np.broadcast_to(np.asarray(val[0], np.float64), (d,))
+            t = np.broadcast_to(np.asarray(val[1], np.float64), (d,))
+            q = q * s + t
+        elif kind == "R":
+            q = q @ _rot_row(d, axis, val)
+        else:
+            m = np.asarray(val, np.float64)
+            if m.shape == (d + 1, d + 1):
+                q = q @ m[:d, :d] + m[d, :d]
+            else:
+                q = q @ m
+    return q.astype(np.float32)
+
+
+def _random_chain(rng, dim, length) -> tc.TransformChain:
+    chain = tc.TransformChain.identity(dim)
+    for _ in range(length):
+        kind = rng.choice(["T", "S", "R", "A", "M"])
+        if kind == "T":
+            chain = chain.translate(*rng.uniform(-3, 3, dim).tolist())
+        elif kind == "S":
+            if rng.random() < 0.3:
+                chain = chain.scale(float(rng.uniform(0.2, 2.0)))
+            else:
+                chain = chain.scale(*rng.uniform(0.2, 2.0, dim).tolist())
+        elif kind == "R":
+            theta = float(rng.uniform(-np.pi, np.pi))
+            chain = chain.rotate(theta) if dim == 2 else \
+                chain.rotate(theta, axis=int(rng.integers(3)))
+        elif kind == "A":
+            chain = chain.affine(rng.uniform(0.2, 2.0, dim).tolist(),
+                                 rng.uniform(-2, 2, dim).tolist())
+        else:
+            m = np.eye(dim + 1, dtype=np.float32)
+            m[:dim, :dim] += rng.uniform(-0.4, 0.4, (dim, dim))
+            m[dim, :dim] = rng.uniform(-2, 2, dim)
+            chain = chain.matrix(m)
+    return chain
+
+
+# ---------------------------------------------------------------------------
+# fused == sequential, random chains, all CPU backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("dim", [2, 3])
+@pytest.mark.parametrize("length", [1, 2, 3, 5, 8])
+def test_fused_chain_matches_sequential(backend, dim, length):
+    rng = np.random.default_rng(100 * dim + length)
+    for trial in range(3):
+        chain = _random_chain(rng, dim, length)
+        n = int(rng.integers(1, 300))       # ragged sizes incl. tiny
+        pts = rng.standard_normal((n, dim)).astype(np.float32)
+        got = chain.apply(jnp.asarray(pts), backend=backend)
+        exp = _sequential_oracle(chain, pts)
+        np.testing.assert_allclose(np.asarray(got), exp,
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_leading_batch_dims_and_apply_many(backend):
+    rng = np.random.default_rng(3)
+    chain = _random_chain(rng, 2, 4)
+    pts = rng.standard_normal((5, 17, 2)).astype(np.float32)
+    got = chain.apply_many(jnp.asarray(pts), backend=backend)
+    assert got.shape == pts.shape
+    exp = _sequential_oracle(chain, pts.reshape(-1, 2)).reshape(pts.shape)
+    np.testing.assert_allclose(np.asarray(got), exp, rtol=2e-4, atol=2e-4)
+    with pytest.raises(ValueError):
+        chain.apply_many(jnp.asarray(pts[0]))   # ndim < 3
+
+
+def test_empty_chain_is_identity():
+    pts = jnp.asarray(RNG.standard_normal((9, 2)), jnp.float32)
+    out = tc.TransformChain.identity(2).apply(pts)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pts))
+
+
+def test_bf16_chain_interpret_matches_ref():
+    rng = np.random.default_rng(11)
+    chain = _random_chain(rng, 2, 4)
+    pts = jnp.asarray(rng.standard_normal((65, 2)), jnp.bfloat16)
+    got_i = chain.apply(pts, backend="interpret")
+    got_r = chain.apply(pts, backend="ref")
+    np.testing.assert_allclose(np.float32(got_i), np.float32(got_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# algebraic folding
+# ---------------------------------------------------------------------------
+
+def test_adjacent_translates_sum_and_scales_multiply():
+    chain = (tc.TransformChain.identity(2)
+             .translate(1.0, 2.0).translate(3.0, -1.0)
+             .scale(2.0).scale(0.5, 4.0))
+    assert chain.is_diagonal
+    a, t = chain.folded()
+    np.testing.assert_allclose(np.asarray(a), np.diag([1.0, 8.0]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t), [4.0 * 1.0, 1.0 * 8.0],
+                               atol=1e-6)
+
+
+def test_scale_translate_fuses_to_one_affine_pass():
+    """A diagonal chain folds to one (s, t) pair == one fused affine."""
+    chain = (tc.TransformChain.identity(2)
+             .scale(2.0, 0.5).translate(1.0, -1.0).scale(3.0))
+    pts = jnp.asarray(RNG.standard_normal((40, 2)), jnp.float32)
+    exp = te.affine(te.translate(te.scale(pts, jnp.asarray([2.0, 0.5])),
+                                 jnp.asarray([1.0, -1.0])),
+                    jnp.asarray([3.0, 3.0]), jnp.zeros((2,)))
+    np.testing.assert_allclose(np.asarray(chain.apply(pts)), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_diagonal_structure_never_builds_matrix_plan():
+    diag = tc.TransformChain.identity(3).translate(1, 2, 3).scale(0.5)
+    mixed = diag.rotate(0.1, axis="z")
+    assert diag.is_diagonal and not mixed.is_diagonal
+    assert diag._plan("ref").kind == "diag"
+    assert mixed._plan("ref").kind == "matrix"
+
+
+def test_homogeneous_matrix_roundtrip():
+    chain = (tc.TransformChain.identity(2)
+             .scale(2.0, 0.5).rotate(0.3).translate(1.0, -2.0))
+    h = np.asarray(chain.as_homogeneous())
+    pts = RNG.standard_normal((21, 2)).astype(np.float32)
+    homo = np.concatenate([pts, np.ones((21, 1), np.float32)], axis=1)
+    exp = (homo @ h)[:, :2]
+    np.testing.assert_allclose(np.asarray(chain.apply(jnp.asarray(pts))),
+                               exp, rtol=1e-4, atol=1e-4)
+    rebuilt = tc.TransformChain.identity(2).matrix(jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(rebuilt.apply(jnp.asarray(pts))),
+                               exp, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan cache: no re-fold, no retrace on repeated apply
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_no_retrace():
+    tc.clear_plan_cache()
+    tc.reset_stats()
+    pts = jnp.asarray(RNG.standard_normal((50, 2)), jnp.float32)
+
+    chain = (tc.TransformChain.identity(2)
+             .scale(1.5, 0.5).rotate(0.2).translate(1.0, 1.0))
+    chain.apply(pts, backend="ref")
+    assert tc.stats["compiles"] == 1 and tc.stats["traces"] == 1
+
+    # same structure, same shape, *different parameter values*: cache hit,
+    # no new plan, no retrace -- the serving hot path.
+    chain2 = (tc.TransformChain.identity(2)
+              .scale(0.7, 2.0).rotate(-1.1).translate(-3.0, 0.5))
+    out2 = chain2.apply(pts, backend="ref")
+    assert tc.stats["compiles"] == 1, "same structure must not recompile"
+    assert tc.stats["hits"] == 1
+    assert tc.stats["traces"] == 1, "same structure+shape must not retrace"
+    np.testing.assert_allclose(np.asarray(out2),
+                               _sequential_oracle(chain2, np.asarray(pts)),
+                               rtol=1e-4, atol=1e-4)
+
+    # new shape with a cached plan: jax retraces once, still no recompile
+    chain.apply(jnp.asarray(RNG.standard_normal((7, 2)), jnp.float32),
+                backend="ref")
+    assert tc.stats["compiles"] == 1 and tc.stats["traces"] == 2
+
+    # different structure: a genuinely new plan
+    chain.rotate(0.1).apply(pts, backend="ref")
+    assert tc.stats["compiles"] == 2
+
+
+def test_builder_is_lazy_until_apply():
+    """then_* / builder calls must do no kernel dispatch (satellite: the old
+    Transform2D ran an eager ref matmul per builder call)."""
+    with opcount.counting() as records:
+        chain = (tc.TransformChain.identity(2)
+                 .translate(1.0, 2.0).scale(2.0, 0.5).rotate(0.4)
+                 .translate(-1.0, 0.0))
+        tf = (te.Transform2D.identity()
+              .then_scale(2.0, 0.5).then_rotate(0.3).then_translate(1.0, 2.0))
+    assert records == [], f"builders dispatched kernels: {records}"
+    assert len(chain) == 4 and len(tf.chain) == 3
+
+
+# ---------------------------------------------------------------------------
+# byte economy: fused moves strictly fewer bytes than sequential
+# ---------------------------------------------------------------------------
+
+def test_fused_chain_moves_strictly_fewer_bytes():
+    n = 4096
+    pts = jnp.asarray(RNG.standard_normal((n, 2)), jnp.float32)
+    sv = jnp.asarray([1.3, 0.8], jnp.float32)
+    t1 = jnp.asarray([3.0, 2.0], jnp.float32)
+    t2 = jnp.asarray([-1.0, 5.0], jnp.float32)
+
+    with opcount.counting() as seq:
+        te.translate(te.rotate(te.scale(te.translate(pts, t2), sv), 0.3), t1)
+    assert len(seq) == 4                       # one HBM pass per primitive
+    seq_bytes = opcount.total_bytes(seq)
+
+    chain = (tc.TransformChain.identity(2)
+             .translate(-1.0, 5.0).scale(1.3, 0.8).rotate(0.3)
+             .translate(3.0, 2.0))
+    with opcount.counting() as fused:
+        chain.apply(pts, backend="ref")
+    assert len(fused) == 1                     # the whole chain: one pass
+    fused_bytes = opcount.total_bytes(fused)
+
+    # fused = 2*N*d*4 + O(1); sequential ~ 2*k*N*d*4 -- strictly fewer,
+    # and by at least (k-1) full read+write passes.
+    assert fused_bytes < seq_bytes
+    assert seq_bytes - fused_bytes >= 3 * pts.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Transform2D / Transform3D wrappers keep the public API working
+# ---------------------------------------------------------------------------
+
+def test_transform2d_api_unchanged_through_new_ir():
+    pts = jnp.asarray(RNG.standard_normal((30, 2)), jnp.float32)
+    tf = (te.Transform2D.identity()
+          .then_scale(2.0, 0.5).then_rotate(0.3).then_translate(1.0, -2.0))
+    via_ir = tf.apply(pts)
+    via_seq = te.translate(
+        te.rotate(te.scale(pts, jnp.asarray([2.0, 0.5])), 0.3),
+        jnp.asarray([1.0, -2.0]))
+    np.testing.assert_allclose(np.asarray(via_ir), np.asarray(via_seq),
+                               rtol=1e-3, atol=1e-3)
+    m = np.asarray(tf.matrix)                  # still a (3, 3) homogeneous
+    assert m.shape == (3, 3) and np.allclose(m[:, 2], [0, 0, 1], atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(te.Transform2D.from_matrix(jnp.asarray(m)).apply(pts)),
+        np.asarray(via_ir), rtol=1e-4, atol=1e-4)
+
+
+def test_transform3d_composite_matches_oracle():
+    pts = RNG.standard_normal((25, 3)).astype(np.float32)
+    tf = (te.Transform3D.identity()
+          .then_rotate(0.4, "x").then_scale(2.0, 1.0, 0.5)
+          .then_rotate(-0.2, "z").then_translate(1.0, 2.0, 3.0))
+    exp = _sequential_oracle(tf.chain, pts)
+    np.testing.assert_allclose(np.asarray(tf.apply(jnp.asarray(pts))), exp,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(tf.apply(jnp.asarray(pts), backend="interpret")), exp,
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: the fused chain bodies vs their oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("n", [1, 7, 129, 1000])
+def test_chain_kernels_interpret_match_ref(d, n):
+    from repro import kernels
+    rng = np.random.default_rng(d * 1000 + n)
+    pts = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(kernels.chain_apply(pts, a, t, backend="interpret")),
+        np.asarray(kernels.chain_apply(pts, a, t, backend="ref")),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(kernels.chain_diag(pts, s, t, backend="interpret")),
+        np.asarray(kernels.chain_diag(pts, s, t, backend="ref")),
+        rtol=1e-6, atol=1e-6)
