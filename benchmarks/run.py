@@ -1,22 +1,65 @@
-"""Benchmark harness: one module per paper table + kernels + roofline.
+"""Benchmark harness: one module per paper table + kernels + serving + roofline.
 
 Prints ``name,us_per_call,derived`` CSV (plus human-readable tables on the
-way).  Invoke:  PYTHONPATH=src python -m benchmarks.run
+way) and records the same rows to ``benchmarks/BENCH_<timestamp>.json`` so
+the perf trajectory across PRs is preserved, not just printed.  Invoke:
+
+    PYTHONPATH=src python -m benchmarks.run
 
 ``--smoke`` runs a seconds-long liveness subset (paper tables + tiny-shape
-kernel rows, roofline skipped) -- the CI pass; see benchmarks/PERF.md.
+kernel + serving rows, roofline skipped) -- the CI pass; see
+benchmarks/PERF.md.  ``--out`` overrides the JSON path (``--out ''``
+disables the record, which is what CI does to keep runners stateless).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+import time
+
+
+def _coerce(v: str):
+    """Derived-field values as real JSON types so BENCH records compare
+    without re-parsing: ints, floats, bools, '3.97x'-style ratios."""
+    if v in ("True", "False"):
+        return v == "True"
+    for conv in (int, float):
+        try:
+            return conv(v)
+        except ValueError:
+            pass
+    if v.endswith("x"):
+        try:
+            return float(v[:-1])
+        except ValueError:
+            pass
+    return v
+
+
+def _parse_rows(rows: list[str]) -> list[dict]:
+    out = []
+    for r in rows:
+        name, us, derived = r.split(",", 2)
+        entry: dict = {"name": name, "us_per_call": float(us)}
+        for field in derived.split(";"):
+            if "=" in field:
+                k, v = field.split("=", 1)
+                entry[k] = _coerce(v)
+            elif field:
+                entry["note"] = field
+        out.append(entry)
+    return out
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / few iters; CI liveness check")
+    ap.add_argument("--out", default=None,
+                    help="JSON record path (default benchmarks/"
+                         "BENCH_<timestamp>.json; '' disables)")
     args = ap.parse_args(argv)
 
     # keep both `python -m benchmarks.run` and `python benchmarks/run.py`
@@ -24,13 +67,16 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
-    from benchmarks import kernel_bench, paper_tables, roofline_bench
+    from benchmarks import (kernel_bench, paper_tables, roofline_bench,
+                            serving_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
     rows += paper_tables.run()
     print("\n== kernel microbenchmarks (paper primitives on the TPU mapping) ==")
     rows += kernel_bench.run(smoke=args.smoke)
+    print("\n== transform serving (batched buckets vs per-request dispatch) ==")
+    rows += serving_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()
@@ -38,6 +84,16 @@ def main(argv=None) -> None:
     print("\nname,us_per_call,derived")
     for r in rows:
         print(r)
+
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    out = args.out
+    if out is None:
+        out = os.path.join(root, "benchmarks", f"BENCH_{stamp}.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump({"timestamp": stamp, "smoke": args.smoke,
+                       "rows": _parse_rows(rows)}, f, indent=1)
+        print(f"\nrecorded {len(rows)} rows -> {out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,76 @@
+"""Serving-engine benchmark: plan-bucketed batched dispatch vs per-request.
+
+The ``chain_serving_*`` rows time one 64-request mixed workload (bounded
+structure pool, lognormal sizes -- see ``repro.serving.workload``) served
+two ways on the CPU ref backend:
+
+  * ``chain_serving_per_request`` -- every request through its own
+    ``TransformChain.apply``: plan-cache hits, but one kernel launch (and
+    one dispatch round-trip) per request;
+  * ``chain_serving_batched``    -- the same requests through
+    ``GeometryServer``: bucketed by structure + size class, one launch per
+    bucket, staging double-buffered against compute.
+
+Derived fields record the launch economy (launches, launches_saved,
+padding waste) next to the wall-clock speedup, so the row shows WHY the
+batched path wins, not just that it does.  See benchmarks/PERF.md.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import serving
+from repro.serving import workload
+from repro.serving.workload import timed as _timed
+
+
+def _build_workload(n_requests: int, max_points: int, n_templates: int):
+    rng = np.random.default_rng(7)
+    return workload.random_workload(
+        rng, n_requests, max_points=max_points,
+        templates=workload.TEMPLATES[:n_templates])
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    iters = 2 if smoke else 5
+    n_requests = 24 if smoke else 64
+    # smoke: fewer structures so the tiny request count still fills
+    # buckets (the liveness check should exercise a batched win, not a
+    # degenerate one-request-per-bucket schedule)
+    reqs = _build_workload(n_requests, max_points=96 if smoke else 1024,
+                           n_templates=4 if smoke else len(workload.TEMPLATES))
+
+    # per-request dispatch baseline (warm plan cache, results to host)
+    for chain, pts in reqs:
+        chain.apply(jnp.asarray(pts), backend="ref")
+    best_single = min(
+        _timed(lambda: [np.asarray(chain.apply(jnp.asarray(pts),
+                                               backend="ref"))
+                        for chain, pts in reqs])
+        for _ in range(iters))
+
+    # batched bucket execution (warm batch plans, same workload)
+    srv = serving.GeometryServer(backend="ref")
+    srv.serve(reqs)
+    serving.reset_stats()
+    best_batched = min(_timed(lambda: srv.serve(reqs)) for _ in range(iters))
+    st = serving.stats
+    launches = st["launches"] // iters
+    waste = 1 - st["payload_points"] / max(1, st["padded_points"])
+
+    rows = [
+        f"chain_serving_per_request{tag},{best_single * 1e6:.1f},"
+        f"requests={n_requests};launches={n_requests}",
+        f"chain_serving_batched{tag},{best_batched * 1e6:.1f},"
+        f"requests={n_requests};launches={launches};"
+        f"launches_saved={n_requests - launches};"
+        f"padding_waste={waste:.2f};"
+        f"speedup_vs_per_request={best_single / best_batched:.2f}x",
+    ]
+    print(f"[serving] {n_requests} requests: per-request "
+          f"{best_single * 1e3:.1f} ms ({n_requests} launches) vs batched "
+          f"{best_batched * 1e3:.1f} ms ({launches} launches) -> "
+          f"{best_single / best_batched:.2f}x")
+    return rows

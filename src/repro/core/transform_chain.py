@@ -12,20 +12,28 @@ array.  ``TransformChain`` is that idea as a small compiler:
      anything containing a rotation or a custom matrix folds into a single
      composed (A, t) pair.  Chains whose structure is pure-diagonal
      (translate/scale/affine only) never build a matrix and never touch the
-     MXU.
+     MXU.  The fold itself is O(k d^2) scalar work and runs host-side in
+     numpy -- one shared code path for single-request ``apply`` and the
+     serving engine, so a request folds to bit-identical composed
+     parameters however it is dispatched (see the folding section note).
   3. **Lower** -- the folded chain lowers to ONE fused lane-dense Pallas
      kernel over the flattened point buffer -- one HBM read of the points,
      one write, with the composed parameters staged as (1, w) context-word
      rows: ``kernels.chain_diag`` for diagonal plans, ``kernels.chain_apply``
      (2d-1 lane-rolled multiply-adds) for general plans.
   4. **Plan cache** -- compiled plans are cached by *chain structure* +
-     backend, and the jitted plan function takes the parameter values as
-     arguments, so the serving hot path (same chain shape, fresh parameter
-     values every request) re-folds nothing and retraces nothing.
+     backend, and the jitted plan function takes the folded parameter
+     values as arguments, so the serving hot path (same chain shape, fresh
+     parameter values every request) recompiles and retraces nothing.
 
 Byte economy vs. sequential primitive dispatch (k-long chain over N points
 of dim d, itemsize 4): sequential moves ~2*k*N*d*4 bytes HBM<->VMEM; the
 fused plan moves 2*N*d*4 + O(1).  ``kernels.opcount`` makes this testable.
+
+``repro.serving.GeometryServer`` layers plan-bucketed batched serving on
+top of this compiler: same-structure requests pack into one (B, L, d)
+batch and execute through the batched forms of the same chain kernels --
+one launch per bucket instead of one per request.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import typing
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import chain_diag as _k_chain_diag
@@ -63,45 +72,56 @@ def reset_stats() -> None:
         stats[k] = 0
 
 
-# -- folding (runs inside the traced plan body; tiny O(d^2) jnp ops) ---------
+# -- folding (host-side numpy float32) ---------------------------------------
+#
+# The fold runs on the host, in numpy, NOT inside the jitted plan.  That is
+# a determinism decision, not a performance one (either way it is O(k d^2)
+# scalar work): XLA:CPU takes per-program freedom in fusing float
+# multiply-adds (FMA contraction, operand association -- both observed, and
+# neither controllable: optimization barriers and bitcast fences are folded
+# away by the algebraic simplifier), so the "same" fold traced at two
+# different batch shapes can differ in its last ULP.  One shared host fold
+# means a request folds to *bit-identical* composed parameters whether it
+# is applied alone or packed into a serving bucket, leaving the fused
+# kernel application as the only XLA-shaped code -- see
+# ``serving.engine`` for the resulting equality contract.
 
-def _vec(v, dim: int) -> jnp.ndarray:
-    v = jnp.asarray(v, jnp.float32)
+def _vec(v, dim: int) -> np.ndarray:
+    v = np.asarray(v, np.float32)
     if v.ndim == 0:
-        v = jnp.broadcast_to(v, (dim,))
+        v = np.broadcast_to(v, (dim,))
     return v.reshape(dim)
 
 
-def _rot(dim: int, axis: int, theta) -> jnp.ndarray:
+def _rot(dim: int, axis: int, theta) -> np.ndarray:
     """Right-multiply (row-vector) rotation matrix: q = p @ R."""
-    c = jnp.cos(jnp.asarray(theta, jnp.float32))
-    s = jnp.sin(jnp.asarray(theta, jnp.float32))
+    c = np.cos(np.float32(theta), dtype=np.float32)
+    s = np.sin(np.float32(theta), dtype=np.float32)
     if dim == 2:
-        return jnp.array([[1.0, 0.0], [0.0, 1.0]]) * c + \
-            jnp.array([[0.0, 1.0], [-1.0, 0.0]]) * s
-    eye = jnp.eye(3, dtype=jnp.float32)
+        return np.array([[c, s], [-s, c]], np.float32)
+    r = np.eye(3, dtype=np.float32)
     i, j = [(1, 2), (2, 0), (0, 1)][axis]   # rotation plane for axis x/y/z
-    r = eye.at[i, i].set(0).at[j, j].set(0)
-    r = r.at[i, i].add(c).at[j, j].add(c).at[i, j].add(s).at[j, i].add(-s)
+    r[i, i] = r[j, j] = c
+    r[i, j], r[j, i] = s, -s
     return r
 
 
-def _mat_parts(val, dim: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _mat_parts(val, dim: int) -> tuple[np.ndarray, np.ndarray]:
     """Split a custom-matrix param into (A (d,d), t (d,)); accepts a (d, d)
     linear matrix or a (d+1, d+1) homogeneous one (row-vector convention)."""
-    m = jnp.asarray(val, jnp.float32)
+    m = np.asarray(val, np.float32)
     if m.shape == (dim + 1, dim + 1):
         return m[:dim, :dim], m[dim, :dim]
     if m.shape == (dim, dim):
-        return m, jnp.zeros((dim,), jnp.float32)
+        return m, np.zeros((dim,), np.float32)
     raise ValueError(f"matrix must be ({dim},{dim}) or "
                      f"({dim + 1},{dim + 1}); got {m.shape}")
 
 
-def _fold_diag(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _fold_diag(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
     """Fold a pure-diagonal chain to (s, t) with q = s (.) p + t."""
-    s = jnp.ones((dim,), jnp.float32)
-    t = jnp.zeros((dim,), jnp.float32)
+    s = np.ones((dim,), np.float32)
+    t = np.zeros((dim,), np.float32)
     for (kind, _), val in zip(kinds, params):
         if kind == "T":
             t = t + _vec(val, dim)
@@ -114,10 +134,10 @@ def _fold_diag(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
     return s, t
 
 
-def _fold_matrix(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _fold_matrix(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
     """Fold a general chain to (A, t) with q = p @ A + t."""
-    a = jnp.eye(dim, dtype=jnp.float32)
-    t = jnp.zeros((dim,), jnp.float32)
+    a = np.eye(dim, dtype=np.float32)
+    t = np.zeros((dim,), np.float32)
     for (kind, axis), val in zip(kinds, params):
         if kind == "T":
             t = t + _vec(val, dim)
@@ -136,11 +156,87 @@ def _fold_matrix(dim: int, kinds, params) -> tuple[jnp.ndarray, jnp.ndarray]:
     return a, t
 
 
+# -- traced-parameter fallback (jnp fold) ------------------------------------
+#
+# The host fold requires concrete parameter values.  When a caller traces
+# chain *parameters* -- jax.grad over a rotation angle, jit over a pose --
+# ``apply`` instead folds in jnp inside the caller's own trace and calls
+# the fused kernel entry directly (plan caching is moot there: the caller's
+# jit already owns compilation).  This path is differentiable; it is NOT
+# part of the serving bit-identity contract, which is about concrete
+# parameters.
+
+def _vec_jnp(v, dim: int):
+    v = jnp.asarray(v, jnp.float32)
+    return jnp.broadcast_to(v, (dim,)) if v.ndim == 0 else v.reshape(dim)
+
+
+def _rot_jnp(dim: int, axis: int, theta):
+    c = jnp.cos(jnp.asarray(theta, jnp.float32))
+    s = jnp.sin(jnp.asarray(theta, jnp.float32))
+    if dim == 2:
+        return jnp.eye(2, dtype=jnp.float32) * c + \
+            jnp.array([[0.0, 1.0], [-1.0, 0.0]], jnp.float32) * s
+    i, j = [(1, 2), (2, 0), (0, 1)][axis]
+    r = jnp.eye(3, dtype=jnp.float32).at[i, i].set(c).at[j, j].set(c)
+    return r.at[i, j].set(s).at[j, i].set(-s)
+
+
+def _fold_jnp(dim: int, kinds, params):
+    a = jnp.eye(dim, dtype=jnp.float32)
+    t = jnp.zeros((dim,), jnp.float32)
+    for (kind, axis), val in zip(kinds, params):
+        if kind == "T":
+            t = t + _vec_jnp(val, dim)
+        elif kind == "S":
+            v = _vec_jnp(val, dim)
+            a, t = a * v[None, :], t * v
+        elif kind == "A":
+            v, u = _vec_jnp(val[0], dim), _vec_jnp(val[1], dim)
+            a, t = a * v[None, :], t * v + u
+        elif kind == "R":
+            r = _rot_jnp(dim, axis, val)
+            a, t = a @ r, t @ r
+        else:                                   # "M"
+            m = jnp.asarray(val, jnp.float32)
+            if m.shape == (dim + 1, dim + 1):
+                m, u = m[:dim, :dim], m[dim, :dim]
+            else:
+                u = jnp.zeros((dim,), jnp.float32)
+            a, t = a @ m, t @ m + u
+    return a, t
+
+
+def _params_traced(params) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves(params))
+
+
+def structure_is_diagonal(structure: tuple) -> bool:
+    """True if ``structure`` (a ``TransformChain.structure`` value) folds to
+    a diagonal (s, t) plan -- translate/scale/affine primitives only."""
+    _, kinds = structure
+    return all(k in _DIAG_KINDS for k, _ in kinds)
+
+
+def fold_structure(structure: tuple, params) -> tuple[np.ndarray, np.ndarray]:
+    """Fold ONE parameter set for ``structure``: float32 (s, t) if the
+    structure is diagonal, else (A, t).  This host fold is shared verbatim
+    by ``TransformChain.apply`` and the serving engine's bucket packing, so
+    a request's composed parameters are bit-identical however it is
+    dispatched."""
+    dim, kinds = structure
+    if structure_is_diagonal(structure):
+        return _fold_diag(dim, kinds, params)
+    return _fold_matrix(dim, kinds, params)
+
+
 # -- plans -------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A compiled chain: ``fn(params, flat_points_2d) -> out`` (jitted)."""
+    """A compiled chain: ``fn(folded, flat_points_2d) -> out`` (jitted),
+    where ``folded`` is the host-folded (s, t) or (A, t) pair."""
     kind: str                      # "diag" | "matrix"
     dim: int
     backend: str
@@ -150,17 +246,17 @@ class Plan:
 
 def _compile(structure: tuple, backend: str) -> Plan:
     dim, kinds = structure
-    diagonal = all(k in _DIAG_KINDS for k, _ in kinds)
+    diagonal = structure_is_diagonal(structure)
 
     if diagonal:
-        def body(params, pts2):
+        def body(folded, pts2):
             stats["traces"] += 1
-            s, t = _fold_diag(dim, kinds, params)
+            s, t = folded
             return _k_chain_diag(pts2, s, t, backend=backend)
     else:
-        def body(params, pts2):
+        def body(folded, pts2):
             stats["traces"] += 1
-            a, t = _fold_matrix(dim, kinds, params)
+            a, t = folded
             return _k_chain_apply(pts2, a, t, backend=backend)
 
     return Plan(kind="diag" if diagonal else "matrix", dim=dim,
@@ -265,12 +361,22 @@ class TransformChain:
         fused affine) or "matrix" (lane-rolled q = p @ A + t)."""
         return "diag" if self.is_diagonal else "matrix"
 
+    def fold(self) -> tuple[np.ndarray, np.ndarray]:
+        """The host fold this chain's plan consumes: float32 (s, t) for
+        diagonal structures, (A, t) otherwise.  Bit-identical wherever it is
+        computed -- ``apply``, the serving engine, a test -- because it is
+        one shared numpy code path (see the folding section note)."""
+        return fold_structure(self.structure, self.params)
+
     def folded(self) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Eagerly fold to the composed (A (d,d), t (d,)) pair."""
+        if _params_traced(self.params):
+            return _fold_jnp(self.dim, self.kinds, self.params)
         if self.is_diagonal:
-            s, t = _fold_diag(self.dim, self.kinds, self.params)
-            return jnp.diag(s), t
-        return _fold_matrix(self.dim, self.kinds, self.params)
+            s, t = self.fold()
+            return jnp.asarray(np.diag(s)), jnp.asarray(t)
+        a, t = self.fold()
+        return jnp.asarray(a), jnp.asarray(t)
 
     def as_homogeneous(self) -> jnp.ndarray:
         """The composed (d+1, d+1) homogeneous matrix (row-vector form)."""
@@ -286,18 +392,30 @@ class TransformChain:
         return _get_plan(self.structure, dispatch.resolve(backend))
 
     def apply(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
-        """Apply the folded chain to (..., d) points in one fused pass."""
+        """Apply the folded chain to (..., d) points in one fused pass.
+
+        Concrete parameters go through the cached plan (host fold, see the
+        folding section note); parameters that are jax tracers fold in jnp
+        inside the caller's trace instead, so grad/jit over chain
+        parameters (pose optimisation) stays differentiable."""
         d = points.shape[-1]
         if d != self.dim:
             raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
         if not self.kinds:
             return points
-        plan = self._plan(backend)
         flat = points.reshape(-1, d)
         param_bytes = 4 * (d * d + d)           # composed (A, t) operands
+        if _params_traced(self.params):
+            # chain parameters are jax tracers (grad/jit over a pose):
+            # fold in jnp inside the caller's trace, differentiably
+            opcount.record("chain_fused_traced", 2 * flat.nbytes + param_bytes)
+            a, t = _fold_jnp(d, self.kinds, self.params)
+            out = _k_chain_apply(flat, a, t, backend=backend)
+            return out.reshape(points.shape)
+        plan = self._plan(backend)
         opcount.record(f"chain_fused_{plan.kind}",
                        2 * flat.nbytes + param_bytes)
-        out = plan.fn(self.params, flat)
+        out = plan.fn(self.fold(), flat)
         return out.reshape(points.shape)
 
     def apply_many(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:

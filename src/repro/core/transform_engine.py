@@ -6,9 +6,12 @@ module is that library re-expressed for TPU: the three primitive classes
 (vector-vector, vector-scalar, matrix) as composable JAX transforms, each
 dispatched to the corresponding Pallas kernel on TPU (ref oracle on CPU).
 
-Points are row vectors (..., 2) in 2D (or (..., 3) homogeneous), so a
-composite transform chain is a single right-multiplied matrix product --
-exactly the paper's "General Composite Algorithm using Matrix Algorithm".
+Points are row vectors: (..., 2) in 2D, (..., 3) in 3D, and every
+transform right-multiplies (q = p @ M), so chaining builder calls in
+reading order is exactly the paper's "General Composite Algorithm using
+Matrix Algorithm" -- without ever materialising homogeneous coordinates:
+the composed matrix exists only as folded (A, t) plan parameters, and the
+homogeneous (d+1, d+1) form is built on demand by ``.matrix``.
 
 Composite transforms
 --------------------
@@ -55,7 +58,7 @@ def scale(points: jnp.ndarray, s, *, backend=None) -> jnp.ndarray:
 
 
 def rotate(points: jnp.ndarray, theta, *, backend=None) -> jnp.ndarray:
-    """q = R(theta) p (matrix algorithm; section 5.3)."""
+    """q = p @ R(theta), row-vector form (matrix algorithm; section 5.3)."""
     return k_rotate2d(points, theta, backend=backend)
 
 
@@ -74,9 +77,11 @@ def vecadd(u: jnp.ndarray, v: jnp.ndarray, *, backend=None) -> jnp.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class Transform2D:
-    """Homogeneous 2D transform composed right-to-left like the paper's
-    matrix algorithm.  Builders are lazy (IR append only); ``apply`` runs
-    the folded chain as one fused kernel pass via the plan cache."""
+    """Composite 2D transform: ``then_*`` builders append in application
+    order (first call applied first -- under the row-vector convention
+    that IS the paper's right-multiplied matrix chain).  Builders are lazy
+    (IR append only); ``apply`` runs the folded chain as one fused kernel
+    pass via the plan cache."""
     chain: TransformChain
 
     @staticmethod

@@ -1,3 +1,5 @@
-from repro.kernels.affine.ops import affine, chain_diag, scale, translate, vecadd
+from repro.kernels.affine.ops import (affine, chain_diag, chain_diag_batch,
+                                      scale, translate, vecadd)
 
-__all__ = ["affine", "chain_diag", "scale", "translate", "vecadd"]
+__all__ = ["affine", "chain_diag", "chain_diag_batch", "scale", "translate",
+           "vecadd"]

@@ -17,7 +17,12 @@ Three bodies cover the public ops:
     buffer.  The per-coordinate scale/shift pattern is tiled across the
     lane axis host-side, so an arbitrary translate/scale/affine chain is
     one lane-dense VPU pass: one HBM read of the points, one write, no
-    per-point lane padding and no MXU involvement.
+    per-point lane padding and no MXU involvement;
+  * ``_chain_diag_batch_kernel`` -- the batched form used by the serving
+    engine: each block row is a different request's flat point buffer and
+    the parameter rows are row-aligned (request b meets its own folded
+    (s, t)), so a whole plan bucket of heterogeneous requests is a single
+    launch.
 """
 from __future__ import annotations
 
@@ -27,7 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.util import LANES, SUBLANES, pad2d, pick_block, stage_flat
+from repro.kernels.util import (LANES, SUBLANES, pad2d, pad_axis, pick_block,
+                                stage_flat, stage_packed)
 
 
 def _affine_kernel(x_ref, s_ref, t_ref, o_ref):
@@ -101,6 +107,49 @@ def chain_diag_1d(flat: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
         interpret=interpret,
     )(xp, srow, trow)
     return out.reshape(-1)[:l]
+
+
+def _chain_diag_batch_kernel(x_ref, s_ref, t_ref, o_ref, *, g: int):
+    x = x_ref[...]                                   # (bm, wr) -- bm requests
+    bm, wr = x.shape
+    x3 = x.reshape(bm, wr // g, g)
+    s = s_ref[...][:, None, :]                       # per-request params,
+    t = t_ref[...][:, None, :]                       # row-aligned with x
+    o_ref[...] = (x3 * s + t).reshape(bm, wr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_diag_batch_2d(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
+                        *, interpret: bool = False) -> jnp.ndarray:
+    """Batched folded diagonal chains: q[b] = s[b] (.) p[b] + t[b].
+
+    ``pts3`` is a packed (B, L, d) batch (one serving request per row,
+    padded to a common L); ``s``/``t`` are (B, d) per-request folded
+    parameters.  Each batch row streams through the same one-pass VPU
+    body as ``chain_diag_1d``, but the context-word parameter rows are
+    *row-aligned* rather than broadcast: request b's block row meets
+    request b's (g,)-tiled parameters, so B heterogeneous requests are
+    one kernel launch.
+    """
+    b, l, d = pts3.shape
+    if b == 0 or l == 0:
+        return pts3
+    xp, lane_coord, bm, g = stage_packed(pts3, d)
+    srow = pad_axis(s.astype(pts3.dtype)[:, lane_coord], 0, bm)     # (Bp, g)
+    trow = pad_axis(t.astype(pts3.dtype)[:, lane_coord], 0, bm)
+    out = pl.pallas_call(
+        functools.partial(_chain_diag_batch_kernel, g=g),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, pts3.dtype),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bm, g), lambda i: (i, 0)),  # row-aligned params
+            pl.BlockSpec((bm, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0)),
+        interpret=interpret,
+    )(xp, srow, trow)
+    return out[:b, :l * d].reshape(b, l, d)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -8,6 +8,7 @@ vs fused chains) are testable.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch, opcount
@@ -80,3 +81,25 @@ def chain_diag(points: jnp.ndarray, s, t, *,
     out = K.chain_diag_1d(points.reshape(-1), s, t, d=d,
                           interpret=(b == "interpret"))
     return out.reshape(points.shape)
+
+
+def chain_diag_batch(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray, *,
+                     backend: str | None = None) -> jnp.ndarray:
+    """Batched folded diagonal chains: q[b] = s[b] (.) p[b] + t[b].
+
+    ``pts3`` is a packed (B, L, d) batch -- one serving request per row,
+    padded to a common length L; ``s``/``t`` are (B, d) per-request folded
+    parameters.  One launch serves the whole batch; on ``ref`` the oracle
+    is the per-request ``chain_diag`` under ``jax.vmap``, so each row's
+    arithmetic is element-for-element the per-request arithmetic (the
+    serving engine's bit-identity contract).  Called under jit inside the
+    serving engine's compiled bucket plans; packed-batch byte accounting
+    happens there via ``opcount.packed_chain_bytes``.
+    """
+    bsz, _, d = pts3.shape
+    s = jnp.broadcast_to(jnp.asarray(s, pts3.dtype), (bsz, d))
+    t = jnp.broadcast_to(jnp.asarray(t, pts3.dtype), (bsz, d))
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return jax.vmap(ref.chain_diag)(pts3, s, t)
+    return K.chain_diag_batch_2d(pts3, s, t, interpret=(b == "interpret"))

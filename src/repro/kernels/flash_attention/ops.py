@@ -18,6 +18,15 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               scale: float | None = None, causal: bool = True,
               window: int | None = None, q_offset: int = 0,
               block_kv: int = 1024, backend: str | None = None) -> jnp.ndarray:
+    """Scaled dot-product attention, GQA-aware (Hq may exceed Hkv).
+
+    ``q`` (B, Hq, S, D) attends over ``k``/``v`` (B, Hkv, T, D); ``causal``
+    masks with ``q_offset`` locating the query block inside the sequence
+    (decode passes the cache position), ``window`` enables sliding-window
+    attention, ``block_kv`` sets the streaming KV block.  Backend per
+    ``repro.kernels.dispatch``; the ref oracle special-cases banded SWA
+    prefill (O(S*2W) instead of O(S*T) masked).
+    """
     b, hq, s, d = q.shape
     scale = scale if scale is not None else d ** -0.5
     be = dispatch.resolve(backend)

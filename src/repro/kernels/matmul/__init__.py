@@ -1,3 +1,4 @@
-from repro.kernels.matmul.ops import chain_apply, matmul, rotate2d
+from repro.kernels.matmul.ops import (chain_apply, chain_apply_batch, matmul,
+                                      rotate2d)
 
-__all__ = ["chain_apply", "matmul", "rotate2d"]
+__all__ = ["chain_apply", "chain_apply_batch", "matmul", "rotate2d"]

@@ -19,7 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.util import (LANES, SUBLANES, CompilerParams, pad_axis,
-                                pick_block, stage_flat)
+                                pick_block, stage_flat, stage_packed)
 
 
 def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
@@ -102,15 +102,8 @@ def chain_matrix_1d(flat: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
     if l == 0:
         return flat
     xp, lane_coord, bm, w = stage_flat(flat, d)
-    a = a.astype(flat.dtype)
-    coef_rows = []
-    for delta in range(-(d - 1), d):
-        src = lane_coord + delta
-        valid = (src >= 0) & (src < d)
-        coef_rows.append(jnp.where(valid,
-                                   a[jnp.clip(src, 0, d - 1), lane_coord],
-                                   jnp.zeros((), flat.dtype)))
-    coef = pad_axis(jnp.stack(coef_rows), 0, SUBLANES)      # (8, w)
+    coef = pad_axis(_coef_rows(a.astype(flat.dtype), lane_coord, d),
+                    0, SUBLANES)                            # (8, w)
     trow = t.astype(flat.dtype)[lane_coord].reshape(1, w)
     out = pl.pallas_call(
         functools.partial(_chain_matrix_kernel, d=d),
@@ -125,3 +118,64 @@ def chain_matrix_1d(flat: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
         interpret=interpret,
     )(xp, coef, trow)
     return out.reshape(-1)[:l]
+
+
+def _coef_rows(a: jnp.ndarray, lane_coord: jnp.ndarray, d: int) -> jnp.ndarray:
+    """The 2d-1 d-periodic coefficient patterns C_delta[j] = A[c+delta, c]
+    for one composed matrix ``a`` (zero where c+delta falls outside [0, d));
+    returns (2d-1, g) with g = len(lane_coord).  Shared by the single-chain
+    and batched (vmapped) lowerings so the MAC schedule cannot diverge."""
+    rows = []
+    for delta in range(-(d - 1), d):
+        src = lane_coord + delta
+        valid = (src >= 0) & (src < d)
+        rows.append(jnp.where(valid, a[jnp.clip(src, 0, d - 1), lane_coord],
+                              jnp.zeros((), a.dtype)))
+    return jnp.stack(rows)
+
+
+def _chain_matrix_batch_kernel(x_ref, c_ref, t_ref, o_ref, *, d: int, g: int):
+    x = x_ref[...]                                   # (bm, wr) -- bm requests
+    bm, wr = x.shape
+    reps = wr // g
+    acc = jnp.zeros_like(x).reshape(bm, reps, g) + t_ref[...][:, None, :]
+    for i, delta in enumerate(range(-(d - 1), d)):
+        xr = jnp.roll(x, -delta, axis=1).reshape(bm, reps, g)
+        acc = acc + xr * c_ref[...][:, i * g:(i + 1) * g][:, None, :]
+    o_ref[...] = acc.reshape(bm, wr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_matrix_batch_2d(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
+                          *, interpret: bool = False) -> jnp.ndarray:
+    """Batched folded general chains: q[b] = p[b] @ A[b] + t[b].
+
+    ``pts3`` is a packed (B, L, d) batch (one serving request per row,
+    padded to a common L); ``a`` (B, d, d) / ``t`` (B, d) are per-request
+    folded parameters.  Same 2d-1 lane-rolled MAC schedule as
+    ``chain_matrix_1d`` -- rolls stay inside a block row, so they never
+    mix requests, and wrapped lanes always meet a zero coefficient -- but
+    the coefficient rows are *row-aligned* (request b's block row meets
+    request b's coefficients), making a whole plan bucket one launch.
+    """
+    b, l, d = pts3.shape
+    if b == 0 or l == 0:
+        return pts3
+    xp, lane_coord, bm, g = stage_packed(pts3, d)
+    coef = jax.vmap(lambda ab: _coef_rows(ab, lane_coord, d))(
+        a.astype(pts3.dtype))                        # (B, 2d-1, g)
+    coef = pad_axis(coef.reshape(b, (2 * d - 1) * g), 0, bm)
+    trow = pad_axis(t.astype(pts3.dtype)[:, lane_coord], 0, bm)
+    out = pl.pallas_call(
+        functools.partial(_chain_matrix_batch_kernel, d=d, g=g),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, pts3.dtype),
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bm, (2 * d - 1) * g), lambda i: (i, 0)),
+            pl.BlockSpec((bm, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0)),
+        interpret=interpret,
+    )(xp, coef, trow)
+    return out[:b, :l * d].reshape(b, l, d)

@@ -1,6 +1,7 @@
 """Public matmul entry (paper section 5.3: rotation/composite transforms)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch, opcount
@@ -54,3 +55,25 @@ def chain_apply(points: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
     out = K.chain_matrix_1d(points.reshape(-1), a, t, d=d,
                             interpret=(b == "interpret"))
     return out.reshape(points.shape)
+
+
+def chain_apply_batch(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
+                      backend: str | None = None) -> jnp.ndarray:
+    """Batched folded general chains: q[b] = p[b] @ A[b] + t[b].
+
+    ``pts3`` is a packed (B, L, d) batch -- one serving request per row,
+    padded to a common length L; ``a`` (B, d, d) / ``t`` (B, d) are
+    per-request folded parameters.  One launch serves the whole batch; on
+    ``ref`` the oracle is the per-request ``chain_matrix`` under
+    ``jax.vmap`` (same unrolled MAC order per row -- the serving engine's
+    bit-identity contract), on ``pallas``/``interpret`` the row-aligned
+    ``chain_matrix_batch_2d`` kernel.  Called under jit inside the serving
+    engine's compiled bucket plans; packed-batch byte accounting happens
+    there via ``opcount.packed_chain_bytes``.
+    """
+    b = dispatch.resolve(backend)
+    a = jnp.asarray(a)
+    t = jnp.asarray(t)
+    if b == "ref":
+        return jax.vmap(ref.chain_matrix)(pts3, a, t)
+    return K.chain_matrix_batch_2d(pts3, a, t, interpret=(b == "interpret"))

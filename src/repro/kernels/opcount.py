@@ -40,3 +40,21 @@ def record(op: str, nbytes: int) -> None:
 
 def total_bytes(records: list[tuple[str, int]]) -> int:
     return sum(b for _, b in records)
+
+
+def packed_chain_bytes(bsz: int, lpad: int, d: int, *, itemsize: int = 4,
+                       kind: str = "matrix") -> int:
+    """HBM bytes moved by one packed-batch chain launch (memory-bound model).
+
+    A bucket of ``bsz`` requests packed to ``lpad`` points each moves the
+    padded point buffer once in and once out (2*B*L*d*itemsize) plus the
+    per-request folded parameters -- (d, d) + (d,) words for a ``matrix``
+    plan, (d,) + (d,) for a ``diag`` plan.  Per-request dispatch of the
+    same bucket moves 2*sum(n_i)*d*itemsize payload bytes but pays one
+    launch per request; the packed launch trades (lpad - n_i) rows of
+    padding per request for a Bx launch reduction.  The serving engine
+    records this number per launch, so tests can assert both sides of
+    that trade (waste cap, launch economy).
+    """
+    param_words = d * d + d if kind == "matrix" else 2 * d
+    return 2 * bsz * lpad * d * itemsize + bsz * param_words * itemsize

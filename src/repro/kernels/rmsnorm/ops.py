@@ -10,6 +10,13 @@ from repro.kernels.rmsnorm import rmsnorm as K
 
 def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, *, eps: float = 1e-6,
             backend: str | None = None) -> jnp.ndarray:
+    """y = x / rms(x) * gain over the trailing dim of ``x`` (any rank).
+
+    The paper's vector-scalar scaling with a *derived* scalar: the scale
+    factor is computed from the row itself and fused into the same pass,
+    so the row is read once.  ``gain`` is (N,); backend per
+    ``repro.kernels.dispatch``.
+    """
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.rmsnorm(x, gain, eps)

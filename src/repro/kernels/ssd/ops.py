@@ -10,7 +10,14 @@ from repro.kernels.ssd import ssd as K
 
 def ssd_intra(xdt: jnp.ndarray, b_in: jnp.ndarray, c_in: jnp.ndarray,
               cum: jnp.ndarray, *, backend: str | None = None):
-    """Intra-chunk SSD core; shapes as in kernels/ssd/ssd.py."""
+    """Mamba-2 SSD intra-chunk core (VMEM-resident masked attention form).
+
+    Computes the within-chunk term of the state-space dual: scores
+    C·Bᵀ gated by the segment-sum decay ``cum``, applied to ``xdt``.
+    Shapes as documented in ``kernels/ssd/ssd.py``; returns the chunk
+    outputs plus the per-chunk state contribution.  Backend per
+    ``repro.kernels.dispatch``.
+    """
     be = dispatch.resolve(backend)
     if be == "ref":
         return ref.ssd_intra(xdt, b_in, c_in, cum)

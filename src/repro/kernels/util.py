@@ -65,6 +65,32 @@ def stage_flat(flat: jnp.ndarray, d: int):
     return xp, lane_coord, bm, w
 
 
+def stage_packed(pts3: jnp.ndarray, d: int):
+    """Stage a packed (B, L, d) point batch for the batched chain kernels.
+
+    Each batch row is one request's flat point buffer (the serving engine's
+    pack/pad product).  Rows are padded to ``wr`` lanes where ``wr`` is a
+    multiple of ``g = lcm(d, LANES)`` -- so the per-coordinate parameter
+    pattern is ``g``-periodic along every row and no point straddles a row
+    edge -- and the batch dim is padded to a ``bm``-row block.  ``bm``
+    shrinks as rows widen so an input block stays within a fixed VMEM
+    budget (oversized single rows are the serving engine's shard cap's
+    problem, not this stager's).  Returns ``(xp (Bp, wr), lane_coord (g,),
+    bm, g)`` with ``lane_coord[j] = j % d``.
+    """
+    b, l, _ = pts3.shape
+    g = d * LANES // math.gcd(d, LANES)
+    wr = round_up(max(l * d, g), g)
+    budget_rows = max(1, (1 << 21) // (wr * max(1, pts3.dtype.itemsize)))
+    bm = pick_block(b, max(SUBLANES, budget_rows // SUBLANES * SUBLANES),
+                    SUBLANES)
+    bp = round_up(b, bm)
+    flat = pts3.reshape(b, l * d)
+    xp = jnp.pad(flat, ((0, bp - b), (0, wr - l * d)))
+    lane_coord = jnp.arange(g) % d
+    return xp, lane_coord, bm, g
+
+
 def pad_axis(x: jnp.ndarray, axis: int, multiple: int,
              value: float = 0.0) -> jnp.ndarray:
     size = x.shape[axis]

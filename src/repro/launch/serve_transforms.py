@@ -1,0 +1,101 @@
+"""Driver for the batched transform-serving engine.
+
+Generates a synthetic mixed workload (bounded structure pool, random
+parameters and point counts -- the serving hot path), runs it through
+``GeometryServer``, and prints the per-bucket schedule plus a comparison
+against per-request dispatch:
+
+    PYTHONPATH=src python -m repro.launch.serve_transforms --requests 64
+    PYTHONPATH=src python -m repro.launch.serve_transforms --smoke
+
+``--smoke`` shrinks the workload to a seconds-long liveness run (what CI
+executes so the documented command cannot rot).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import serving
+from repro.serving import workload
+from repro.serving.workload import timed as _timed
+
+
+def run_workload(requests: int, *, backend: str, waste_cap: float,
+                 max_points: int, max_points_per_launch: int | None,
+                 seed: int, compare: bool = True) -> dict:
+    """Serve one workload; returns the timing/schedule summary dict."""
+    rng = np.random.default_rng(seed)
+    reqs = workload.random_workload(rng, requests, max_points=max_points)
+
+    serving.reset_stats()
+    srv = serving.GeometryServer(backend=backend, waste_cap=waste_cap,
+                                 max_points_per_launch=max_points_per_launch)
+    warm = srv.serve(reqs)                       # compile + trace once
+    jax.block_until_ready(warm)
+    serving.reset_stats()
+    srv.serve(reqs)                              # one counted flush
+    stats = dict(serving.stats)
+    batched_s = min(_timed(lambda: srv.serve(reqs)) for _ in range(3))
+
+    per_request_s = None
+    if compare:
+        for chain, pts in reqs:                  # warm per-request plans
+            chain.apply(jnp.asarray(pts), backend=backend)
+        per_request_s = min(
+            _timed(lambda: [chain.apply(jnp.asarray(pts), backend=backend)
+                            for chain, pts in reqs])
+            for _ in range(3))
+
+    return {"requests": requests, "batched_s": batched_s,
+            "per_request_s": per_request_s, "report": srv.last_report,
+            "stats": stats}
+
+
+def print_summary(res: dict) -> None:
+    st = res["stats"]
+    print(f"{'bucket':<12} {'plan':<7} {'lpad':>5} {'reqs':>5} "
+          f"{'launches':>8} {'waste':>6}")
+    for rep in res["report"]:
+        print(f"{rep.structure:<12} {rep.kind:<7} {rep.lpad:>5} "
+              f"{rep.requests:>5} {rep.launches:>8} {rep.waste:>6.1%}")
+    print(f"\n{st['requests']} requests -> {st['launches']} launches "
+          f"({st['buckets']} buckets, {st['shards']} extra shards); "
+          f"padding {1 - st['payload_points'] / max(1, st['padded_points']):.1%}")
+    line = f"batched: {res['batched_s'] * 1e3:.1f} ms"
+    if res["per_request_s"] is not None:
+        line += (f"   per-request: {res['per_request_s'] * 1e3:.1f} ms   "
+                 f"speedup: {res['per_request_s'] / res['batched_s']:.2f}x")
+    print(line)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "ref", "interpret", "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--waste-cap", type=float, default=0.5)
+    ap.add_argument("--max-points", type=int, default=4096)
+    ap.add_argument("--max-points-per-launch", type=int, default=None,
+                    help="shard buckets whose packed B*L exceeds this")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the per-request dispatch baseline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload; CI liveness check")
+    args = ap.parse_args(argv)
+
+    requests = 16 if args.smoke else args.requests
+    max_points = 128 if args.smoke else args.max_points
+    res = run_workload(requests, backend=args.backend,
+                       waste_cap=args.waste_cap, max_points=max_points,
+                       max_points_per_launch=args.max_points_per_launch,
+                       seed=args.seed, compare=not args.no_compare)
+    print_summary(res)
+
+
+if __name__ == "__main__":
+    main()

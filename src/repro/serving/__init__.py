@@ -1,0 +1,21 @@
+"""Batched transform-serving engine (plan-bucketed scheduling).
+
+Layered on the PR 1 fused chain compiler: heterogeneous transform requests
+bucket by chain structure + backend (+ dtype + padded size class), every
+bucket executes as ONE batched fused-kernel launch against one cached
+plan, and bucket k+1's host->device staging overlaps bucket k's compute
+(the paper's frame-buffer set-0/set-1 discipline).  See
+``docs/architecture.md`` for the dataflow diagram and
+``repro.serving.engine`` for the mechanics.
+"""
+from repro.serving.bucketing import padded_length, waste_fraction
+from repro.serving.engine import (BatchPlan, BucketReport, GeometryServer,
+                                  clear_plan_cache, get_batch_plan,
+                                  reset_stats, stats)
+from repro.serving.workload import chain_for, random_workload
+
+__all__ = [
+    "BatchPlan", "BucketReport", "GeometryServer", "chain_for",
+    "clear_plan_cache", "get_batch_plan", "padded_length", "random_workload",
+    "reset_stats", "stats", "waste_fraction",
+]

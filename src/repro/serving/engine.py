@@ -1,0 +1,334 @@
+"""GeometryServer: plan-bucketed batched serving of transform chains.
+
+The ROADMAP north-star is heavy traffic: millions of small "apply this
+composite transform to these points" requests.  Dispatching each one
+through ``TransformChain.apply`` pays one kernel launch per request and
+leaves the plan cache as the only amortisation.  This engine is the
+missing server loop, built from the paper's M1 execution discipline:
+
+  1. **Bucket** -- pending requests group by
+     ``(TransformChain.structure, backend, dtype, padded_length)``.
+     Structure + backend pick the compiled plan (every request in a bucket
+     hits ONE cached batch plan -- the context-memory discipline: load a
+     context once, stream many operands through it); the size-bucketing
+     policy (``bucketing.padded_length``: power-of-two grid refined under
+     a waste cap) picks the padded length so padding waste per request
+     stays below the cap.
+  2. **Pack** -- each bucket's variable-length point sets pad/stack into
+     one lane-dense (B, L, d) batch, and each request folds host-side
+     through the SAME numpy fold ``apply`` uses
+     (``TransformChain.fold``); the folded (A, t) pairs stack into the
+     batch the kernels consume.
+  3. **Launch** -- the whole bucket executes as a single fused kernel
+     launch (``kernels.chain_diag_batch`` / ``chain_apply_batch``), the
+     batched ``apply_many`` form of PR 1's one-HBM-pass chain kernels.
+     Buckets whose packed batch exceeds the launch cap split into shards
+     along the batch axis (and the packed buffer is placed through the
+     ``distributed.sharding`` helpers when a device mesh is ambient).
+  4. **Overlap** -- bucket k+1's host->device staging is dispatched while
+     bucket k computes, the frame-buffer set-0/set-1 overlap of the paper:
+     set 0 is the bucket the RC array (device) is computing on, set 1 is
+     the bucket the DMA (host staging) is filling.
+
+Equality contract vs. per-request ``apply`` (asserted by
+``tests/test_serving.py``): the fold is bit-identical by construction (one
+shared host code path); the fused application runs the same per-request
+arithmetic, but XLA:CPU reserves per-program freedom in contracting float
+multiply-adds, so across *different batch shapes* the last ULP may differ
+-- packed results are exact on diagonal plans in practice and within 1 ULP
+on matrix plans, deterministic for a fixed bucket shape, and padded rows
+never contaminate payload rows (points are row-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import typing
+
+import jax
+import numpy as np
+
+from repro.core import transform_chain as tc
+from repro.distributed import sharding
+from repro.kernels import (chain_apply_batch, chain_diag_batch, dispatch,
+                           opcount)
+from repro.serving import bucketing
+
+#: serving statistics (observable by tests, benchmarks and the driver):
+#:   plan_compiles -- batched plans built (one per distinct structure+backend)
+#:   plan_hits     -- plans served from the cache
+#:   traces        -- jit traces of plan bodies (new (B, L) shapes retrace;
+#:                    a seen shape must not)
+#:   launches      -- batched kernel launches issued (shards included)
+#:   requests      -- requests served through flush()
+#:   buckets       -- plan buckets executed
+#:   shards        -- extra launches from splitting oversized buckets
+#:   payload_points / padded_points -- real vs padded points moved
+stats = {"plan_compiles": 0, "plan_hits": 0, "traces": 0, "launches": 0,
+         "requests": 0, "buckets": 0, "shards": 0,
+         "payload_points": 0, "padded_points": 0}
+
+_BATCH_PLANS: dict[tuple, "BatchPlan"] = {}
+
+
+def reset_stats() -> None:
+    for k in stats:
+        stats[k] = 0
+
+
+def clear_plan_cache() -> None:
+    """Drop all compiled batch plans (benchmarks use this for cold timings)."""
+    _BATCH_PLANS.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """A compiled bucket executor: ``fn(folded_batch, pts3) -> out``
+    (jitted), where ``folded_batch`` stacks the bucket's host-folded
+    per-request parameters -- (s (B,d), t (B,d)) or (A (B,d,d), t (B,d))."""
+    kind: str                      # "diag" | "matrix"
+    dim: int
+    backend: str
+    fn: typing.Callable
+
+
+def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
+    dim, _ = structure
+    diagonal = tc.structure_is_diagonal(structure)
+
+    if diagonal:
+        def body(folded, pts3):
+            stats["traces"] += 1
+            s, t = folded
+            return chain_diag_batch(pts3, s, t, backend=backend)
+    else:
+        def body(folded, pts3):
+            stats["traces"] += 1
+            a, t = folded
+            return chain_apply_batch(pts3, a, t, backend=backend)
+
+    return BatchPlan(kind="diag" if diagonal else "matrix", dim=dim,
+                     backend=backend, fn=jax.jit(body))
+
+
+def get_batch_plan(structure: tuple, backend: str) -> BatchPlan:
+    """Mirrors ``transform_chain._get_plan`` deliberately: the two caches
+    stay separate because they count into different stats domains (chain
+    compiler vs serving engine) and compile different bodies (single
+    folded pair vs stacked batch); keep their discipline in sync."""
+    key = (structure, backend)
+    plan = _BATCH_PLANS.get(key)
+    if plan is None:
+        stats["plan_compiles"] += 1
+        plan = _compile_batch(structure, backend)
+        _BATCH_PLANS[key] = plan
+    else:
+        stats["plan_hits"] += 1
+    return plan
+
+
+# -- the server --------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    chain: tc.TransformChain
+    points: np.ndarray             # original-shape host copy
+    n: int                         # flattened point count
+
+
+@dataclasses.dataclass
+class BucketReport:
+    """Per-bucket accounting for one flush (the driver prints these)."""
+    structure: str                 # e.g. "2D:TSRT"
+    kind: str                      # plan kind: diag | matrix
+    lpad: int                      # padded points per request
+    requests: int
+    launches: int                  # 1 unless the bucket sharded
+    payload_points: int
+    padded_points: int
+
+    @property
+    def waste(self) -> float:
+        return 1.0 - self.payload_points / max(1, self.padded_points)
+
+    @property
+    def launches_saved(self) -> int:
+        return self.requests - self.launches
+
+
+def _structure_tag(structure: tuple) -> str:
+    dim, kinds = structure
+    return f"{dim}D:" + "".join(k for k, _ in kinds)
+
+
+class GeometryServer:
+    """Batched transform-serving engine over the PR 1 chain compiler.
+
+        server = GeometryServer(backend="ref")
+        tickets = [server.submit(chain_i, points_i) for ...]
+        results = server.flush()        # one launch per plan bucket
+
+    ``submit`` only records the request (host side, allocation-light);
+    ``flush`` buckets, packs, and double-buffers the launches.  Results
+    come back in submission order as host numpy arrays (serving results
+    leave the device; per-request jax slicing would re-pay the dispatch
+    overhead the batching removed), each with its request's original
+    leading shape, matching ``chain_i.apply(points_i)`` under the module
+    equality contract.
+    """
+
+    def __init__(self, *, backend: str | None = None,
+                 min_len: int = bucketing.MIN_LEN,
+                 waste_cap: float = bucketing.WASTE_CAP,
+                 max_points_per_launch: int | None = None):
+        self.backend = backend
+        self.min_len = min_len
+        self.waste_cap = waste_cap
+        #: shard cap: a bucket whose packed B*L exceeds this splits into
+        #: multiple launches along the batch axis
+        self.max_points_per_launch = max_points_per_launch
+        self._pending: list[_Pending] = []
+        self._ticket = 0
+        self.last_report: list[BucketReport] = []
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, chain: tc.TransformChain, points) -> int:
+        """Queue one request; returns its ticket.  The next flush() returns
+        results ordered by submission, one per queued request."""
+        # a real copy, not a view: the queue must be immune to callers
+        # mutating their buffer between submit and flush
+        pts = np.array(points, copy=True)
+        if pts.ndim < 1 or pts.shape[-1] != chain.dim:
+            raise ValueError(f"chain is {chain.dim}D, points are "
+                             f"{pts.shape}")
+        ticket = self._ticket
+        self._ticket += 1
+        self._pending.append(_Pending(ticket, chain, pts,
+                                      pts.size // chain.dim))
+        return ticket
+
+    def serve(self, items) -> list:
+        """Convenience: submit an iterable of (chain, points), then flush."""
+        for chain, points in items:
+            self.submit(chain, points)
+        return self.flush()
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- execution -----------------------------------------------------------
+
+    def _bucket_key(self, p: _Pending, backend: str) -> tuple:
+        lpad = bucketing.padded_length(p.n, min_len=self.min_len,
+                                       waste_cap=self.waste_cap)
+        return (p.chain.structure, backend, np.dtype(p.points.dtype).str,
+                lpad)
+
+    def _pack(self, reqs: list[_Pending], lpad: int, dim: int):
+        """Pack a bucket: (B, lpad, d) zero-padded points + the stack of
+        each request's host-folded parameters (the same numpy fold
+        ``TransformChain.apply`` runs, so the folds are bit-identical)."""
+        dtype = reqs[0].points.dtype
+        packed = np.zeros((len(reqs), lpad, dim), dtype)
+        for i, r in enumerate(reqs):
+            packed[i, :r.n] = r.points.reshape(-1, dim)
+        folds = [r.chain.fold() for r in reqs]
+        stacked = tuple(np.stack(part) for part in zip(*folds))
+        return stacked, packed
+
+    def _chunks(self, n_reqs: int, lpad: int) -> list[slice]:
+        """Shard an oversized bucket along the batch axis."""
+        cap = self.max_points_per_launch
+        if cap is None or n_reqs * lpad <= cap:
+            return [slice(0, n_reqs)]
+        rows = max(1, cap // lpad)
+        return [slice(i, min(i + rows, n_reqs))
+                for i in range(0, n_reqs, rows)]
+
+    @staticmethod
+    def _stage(stacked, packed):
+        """Host->device staging for one launch (the set-1 DMA).  When a
+        device mesh is ambient the packed batch is placed sharded over the
+        mesh's fsdp axes via the distributed.sharding helpers, so one
+        launch spans the mesh (SPMD).  On a single device the arrays pass
+        straight to the jitted plan, whose C++ argument path does the
+        transfer -- an explicit ``device_put`` there is measurably pure
+        python dispatch overhead (it dominated the flush profile)."""
+        mesh = sharding.ambient_mesh()
+        if mesh is not None and getattr(mesh, "axis_names", ()) \
+                and math.prod(mesh.shape.values()) > 1:
+            spec = sharding.batch_specs(packed, mesh, accum_dim=False)
+            shard = sharding.to_shardings(spec, mesh, packed)
+            return (jax.device_put(stacked), jax.device_put(packed, shard))
+        return (stacked, packed)
+
+    def flush(self) -> list:
+        """Execute all pending requests; results in submission order."""
+        pending, self._pending = self._pending, []
+        backend = dispatch.resolve(self.backend)
+        results: dict[int, typing.Any] = {}
+        buckets: dict[tuple, list[_Pending]] = {}
+        for p in pending:
+            if len(p.chain) == 0 or p.n == 0:
+                results[p.ticket] = p.points               # identity / empty
+            else:
+                buckets.setdefault(self._bucket_key(p, backend), []).append(p)
+
+        # Build the launch list: (plan, stacked, packed, reqs) per shard.
+        launches = []
+        self.last_report = []
+        for (structure, bk, _dt, lpad), reqs in buckets.items():
+            plan = get_batch_plan(structure, bk)
+            stacked, packed = self._pack(reqs, lpad, plan.dim)
+            chunks = self._chunks(len(reqs), lpad)
+            for sl in chunks:
+                launches.append((plan, lpad,
+                                 jax.tree.map(lambda x: x[sl], stacked),
+                                 packed[sl], reqs[sl]))
+            payload = sum(r.n for r in reqs)
+            self.last_report.append(BucketReport(
+                structure=_structure_tag(structure), kind=plan.kind,
+                lpad=lpad, requests=len(reqs), launches=len(chunks),
+                payload_points=payload, padded_points=len(reqs) * lpad))
+            stats["buckets"] += 1
+            stats["shards"] += len(chunks) - 1 if len(chunks) > 1 else 0
+            stats["payload_points"] += payload
+            stats["padded_points"] += len(reqs) * lpad
+
+        # Double-buffered dispatch (frame-buffer set 0 / set 1): stage the
+        # first launch, then keep one launch computing (set 0) while the
+        # next launch's host->device transfer streams (set 1).  Nothing
+        # blocks until unpack -- jax's async dispatch provides the overlap;
+        # this loop just orders the work so it CAN overlap.
+        outs = []
+        staged = self._stage(launches[0][2], launches[0][3]) if launches \
+            else None
+        for k, (plan, lpad, _st, packed, reqs) in enumerate(launches):
+            dev_params, dev_points = staged
+            opcount.record(
+                f"serve_bucket_{plan.kind}",
+                opcount.packed_chain_bytes(
+                    len(reqs), lpad, plan.dim,
+                    itemsize=packed.dtype.itemsize, kind=plan.kind))
+            outs.append(plan.fn(dev_params, dev_points))   # async: set 0
+            stats["launches"] += 1
+            if k + 1 < len(launches):
+                staged = self._stage(launches[k + 1][2],
+                                     launches[k + 1][3])   # async: set 1
+
+        # Unpack: one device->host sync per launch, then numpy slicing --
+        # per-request unpack must not become per-request dispatch again
+        # (a jax slice per request would re-pay the launch overhead the
+        # batching just removed).  Each result is a payload-sized COPY:
+        # a view would be read-only and would pin the whole padded batch
+        # buffer for as long as the caller keeps any one result.
+        for (plan, lpad, _st, _pk, reqs), out in zip(launches, outs):
+            host = np.asarray(out)
+            for i, r in enumerate(reqs):
+                results[r.ticket] = np.array(
+                    host[i, :r.n].reshape(r.points.shape))
+        stats["requests"] += len(pending)
+        return [results[p.ticket] for p in pending]

@@ -1,0 +1,82 @@
+"""Synthetic mixed serving workloads (shared by tests, benchmarks, drivers).
+
+A workload draws from a bounded pool of chain *structures* (the thing the
+engine buckets by) while every request gets fresh parameter values and a
+fresh variable-length point set -- the serving hot path the plan cache was
+built for: many requests, few structures.  ``timed`` is the one shared
+wall-clock helper, so the benchmark rows and the driver's printed numbers
+cannot measure differently.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.transform_chain import TransformChain
+
+
+def timed(fn) -> float:
+    """Seconds for one call of ``fn()``, blocking on every jax leaf in its
+    result (non-jax leaves pass through)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+#: structure templates: (dim, kind string).  A workload samples a subset,
+#: mixing diagonal (TS/A-only) and general (R/M) chains across 2D and 3D.
+TEMPLATES: tuple[tuple[int, str], ...] = (
+    (2, "TSRT"),          # the paper's translate/scale/rotate composite
+    (2, "TST"),           # diagonal: folds to one affine, VPU-only plan
+    (2, "R"),             # bare rotation
+    (2, "ASM"),           # affine + scale + custom matrix
+    (3, "TRS"),           # 3D pipeline (rotation about a random axis)
+    (3, "SAT"),           # 3D diagonal
+    (3, "RMRT"),          # 3D general with custom matrix
+    (2, "TTSS"),          # diagonal, exercises translate/scale folding
+)
+
+
+def chain_for(rng: np.random.Generator, dim: int, kinds: str) -> TransformChain:
+    """A chain with the given structure and fresh random parameters."""
+    chain = TransformChain.identity(dim)
+    for kind in kinds:
+        if kind == "T":
+            chain = chain.translate(*rng.uniform(-3, 3, dim).tolist())
+        elif kind == "S":
+            chain = chain.scale(*rng.uniform(0.2, 2.0, dim).tolist())
+        elif kind == "R":
+            theta = float(rng.uniform(-np.pi, np.pi))
+            chain = chain.rotate(theta) if dim == 2 else \
+                chain.rotate(theta, axis=int(rng.integers(3)))
+        elif kind == "A":
+            chain = chain.affine(rng.uniform(0.2, 2.0, dim).tolist(),
+                                 rng.uniform(-2, 2, dim).tolist())
+        elif kind == "M":
+            m = np.eye(dim + 1, dtype=np.float32)
+            m[:dim, :dim] += rng.uniform(-0.4, 0.4, (dim, dim))
+            m[dim, :dim] = rng.uniform(-2, 2, dim)
+            chain = chain.matrix(m)
+        else:
+            raise ValueError(f"unknown primitive kind {kind!r}")
+    return chain
+
+
+def random_workload(rng: np.random.Generator, n_requests: int, *,
+                    templates=TEMPLATES, max_points: int = 512,
+                    min_points: int = 1, sigma: float = 0.7):
+    """``n_requests`` (chain, points) pairs: structures cycle through the
+    template pool, parameters are random per request, and point counts are
+    lognormal around sqrt(min*max) -- serving traffic concentrates around
+    a typical request size rather than spreading uniformly, which is what
+    makes size-bucketed packing effective."""
+    median = max(1.0, np.sqrt(max(1, min_points) * max_points))
+    requests = []
+    for i in range(n_requests):
+        dim, kinds = templates[i % len(templates)]
+        n = int(np.clip(rng.lognormal(np.log(median), sigma),
+                        min_points, max_points))
+        pts = rng.standard_normal((n, dim)).astype(np.float32)
+        requests.append((chain_for(rng, dim, kinds), pts))
+    return requests

@@ -1,0 +1,258 @@
+"""Batched transform-serving engine tests: packed-batch equality against
+per-request ``apply``, the size-bucketing waste cap, the one-compile-per-
+structure (no-retrace) guarantee under load, oversized-bucket sharding,
+and the packed-batch launch/byte accounting.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import serving
+from repro.core import transform_chain as tc
+from repro.kernels import opcount
+from repro.serving import bucketing, workload
+
+
+def _fresh_server(**kw):
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    return serving.GeometryServer(**kw)
+
+
+def _serve_and_compare(backend, reqs, **server_kw):
+    """Serve ``reqs`` packed and compare each result to per-request apply.
+
+    The fold is bit-identical by construction (one shared host code path),
+    so the only permitted daylight is the fused application's last-ULP
+    freedom (XLA:CPU contracts float multiply-adds per program shape):
+    diagonal plans must match exactly; matrix plans to float32-epsilon
+    scale -- far inside the 2e-4 the compiler's own oracle tests allow.
+    """
+    srv = _fresh_server(backend=backend, **server_kw)
+    outs = srv.serve(reqs)
+    assert len(outs) == len(reqs)
+    for chain, pts in reqs:
+        assert pts.dtype == np.float32
+    for (chain, pts), out in zip(reqs, outs):
+        exp = chain.apply(jnp.asarray(pts), backend=backend)
+        assert out.shape == pts.shape
+        if chain.is_diagonal:
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+        else:
+            np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                       rtol=2e-6, atol=2e-6)
+    return srv
+
+
+# ---------------------------------------------------------------------------
+# packed == per-request across random mixed workloads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_packed_matches_per_request_mixed_workload(backend):
+    rng = np.random.default_rng(11)
+    reqs = workload.random_workload(rng, 48, max_points=300)
+    srv = _serve_and_compare(backend, reqs)
+    # structures x sizes bucket; every bucket saved launches vs per-request
+    assert serving.stats["requests"] == 48
+    assert serving.stats["launches"] < 48
+    assert serving.stats["launches"] == sum(r.launches
+                                            for r in srv.last_report)
+
+
+def test_packed_results_deterministic_across_flushes():
+    """Same workload, same bucket shapes -> bitwise identical results."""
+    rng = np.random.default_rng(5)
+    reqs = workload.random_workload(rng, 24, max_points=200)
+    out1 = _fresh_server(backend="ref").serve(reqs)
+    out2 = serving.GeometryServer(backend="ref").serve(reqs)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_padding_never_contaminates_payload():
+    """A request's bits must not depend on WHICH requests share its bucket
+    (same bucket shape, different neighbours)."""
+    rng = np.random.default_rng(9)
+    dim, kinds = 2, "TSRT"
+    probe = workload.chain_for(rng, dim, kinds)
+    pts = rng.standard_normal((50, dim)).astype(np.float32)
+    outs = []
+    for neighbour_seed in (1, 2):
+        nrng = np.random.default_rng(neighbour_seed)
+        reqs = [(probe, pts)] + [
+            (workload.chain_for(nrng, dim, kinds),
+             nrng.standard_normal((int(nrng.integers(1, 64)), dim))
+             .astype(np.float32))
+            for _ in range(5)]
+        outs.append(np.asarray(_fresh_server(backend="ref").serve(reqs)[0]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_identity_and_empty_requests_pass_through():
+    srv = _fresh_server(backend="ref")
+    pts = np.ones((4, 2), np.float32)
+    srv.submit(tc.TransformChain.identity(2), pts)
+    srv.submit(workload.chain_for(np.random.default_rng(0), 2, "TS"),
+               np.zeros((0, 2), np.float32))
+    out_id, out_empty = srv.flush()
+    np.testing.assert_array_equal(np.asarray(out_id), pts)
+    assert out_empty.shape == (0, 2)
+    assert serving.stats["launches"] == 0
+
+
+def test_leading_batch_shapes_roundtrip():
+    """(B, N, d)-shaped requests come back with their original shape."""
+    rng = np.random.default_rng(3)
+    chain = workload.chain_for(rng, 3, "TRS")
+    pts = rng.standard_normal((4, 13, 3)).astype(np.float32)
+    out = _fresh_server(backend="ref").serve([(chain, pts)])[0]
+    assert out.shape == pts.shape
+    exp = chain.apply(jnp.asarray(pts), backend="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_submitted_points_are_copied():
+    """Mutating the caller's buffer between submit and flush must not
+    change the queued request (and identity results must not alias it)."""
+    rng = np.random.default_rng(1)
+    chain = workload.chain_for(rng, 2, "TS")
+    pts = rng.standard_normal((20, 2)).astype(np.float32)
+    snapshot = pts.copy()
+    srv = _fresh_server(backend="ref")
+    srv.submit(chain, pts)
+    srv.submit(tc.TransformChain.identity(2), pts)
+    pts[:] = 0.0
+    out, out_id = srv.flush()
+    np.testing.assert_array_equal(
+        np.asarray(out),
+        np.asarray(chain.apply(jnp.asarray(snapshot), backend="ref")))
+    np.testing.assert_array_equal(np.asarray(out_id), snapshot)
+
+
+def test_dim_mismatch_rejected():
+    srv = _fresh_server(backend="ref")
+    with pytest.raises(ValueError):
+        srv.submit(tc.TransformChain.identity(2).translate(1.0),
+                   np.zeros((5, 3), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# size-bucketing policy: the waste cap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("waste_cap", [0.5, 0.25, 0.125])
+def test_padded_length_respects_waste_cap(waste_cap):
+    min_len = 8
+    prev = 0
+    for n in range(1, 3000):
+        lpad = bucketing.padded_length(n, min_len=min_len,
+                                       waste_cap=waste_cap)
+        assert lpad >= n and lpad >= min_len
+        if n >= min_len:
+            assert bucketing.waste_fraction(n, lpad) < waste_cap, \
+                f"n={n} lpad={lpad}"
+        assert lpad >= prev          # monotone grid
+        prev = lpad
+
+
+def test_pow2_grid_at_default_cap():
+    """waste_cap=0.5 degenerates to power-of-two padding."""
+    for n in (1, 8, 9, 17, 100, 1000):
+        lpad = bucketing.padded_length(n)
+        assert lpad & (lpad - 1) == 0
+
+
+def test_engine_waste_stays_under_cap():
+    rng = np.random.default_rng(17)
+    reqs = workload.random_workload(rng, 40, max_points=400, min_points=8)
+    for cap in (0.5, 0.25):
+        srv = _fresh_server(backend="ref", waste_cap=cap)
+        srv.serve(reqs)
+        for rep in srv.last_report:
+            assert rep.waste < cap, rep
+
+
+# ---------------------------------------------------------------------------
+# plan economy: one compile per structure under load, few launches
+# ---------------------------------------------------------------------------
+
+def test_one_plan_compile_per_structure_under_load():
+    rng = np.random.default_rng(23)
+    templates = ((2, "TSRT"), (3, "SAT"), (2, "TST"))
+    reqs = workload.random_workload(rng, 60, templates=templates,
+                                    max_points=250)
+    srv = _fresh_server(backend="ref")
+    srv.serve(reqs)
+    assert serving.stats["plan_compiles"] == len(templates)
+    assert serving.stats["plan_hits"] == len(srv.last_report) - len(templates)
+    # a second wave: same request sizes (same bucket shapes) but fresh
+    # parameter values -- the serving hot path.  No new compiles, no new
+    # traces.
+    traces = serving.stats["traces"]
+    prng = np.random.default_rng(99)
+    wave2 = [(workload.chain_for(prng, ch.dim,
+                                 "".join(k for k, _ in ch.kinds)), pts)
+             for ch, pts in reqs]
+    srv.serve(wave2)
+    assert serving.stats["plan_compiles"] == len(templates)
+    assert serving.stats["traces"] == traces, \
+        "seen bucket shapes must not retrace"
+
+
+def test_bucketing_groups_by_structure_and_size():
+    rng = np.random.default_rng(31)
+    # 16 requests, one structure, sizes split across two pow2 classes
+    chain_rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(16):
+        n = 30 if i % 2 else 120          # -> lpad 32 and 128
+        reqs.append((workload.chain_for(chain_rng, 2, "TSRT"),
+                     rng.standard_normal((n, 2)).astype(np.float32)))
+    srv = _fresh_server(backend="ref")
+    srv.serve(reqs)
+    assert serving.stats["buckets"] == 2
+    assert serving.stats["launches"] == 2
+    assert {r.lpad for r in srv.last_report} == {32, 128}
+    assert all(r.requests == 8 for r in srv.last_report)
+
+
+# ---------------------------------------------------------------------------
+# sharding oversized buckets
+# ---------------------------------------------------------------------------
+
+def test_oversized_bucket_shards_and_matches():
+    rng = np.random.default_rng(41)
+    chain_rng = np.random.default_rng(2)
+    reqs = [(workload.chain_for(chain_rng, 2, "TSRT"),
+             rng.standard_normal((100, 2)).astype(np.float32))
+            for _ in range(12)]                   # one bucket, lpad=128
+    srv = _serve_and_compare("ref", reqs, max_points_per_launch=3 * 128)
+    assert serving.stats["buckets"] == 1
+    assert serving.stats["launches"] == 4        # 12 reqs / 3 rows per shard
+    assert serving.stats["shards"] == 3
+    assert srv.last_report[0].launches == 4
+
+
+# ---------------------------------------------------------------------------
+# packed-batch byte accounting
+# ---------------------------------------------------------------------------
+
+def test_serving_records_packed_bytes_per_launch():
+    rng = np.random.default_rng(43)
+    chain_rng = np.random.default_rng(4)
+    reqs = [(workload.chain_for(chain_rng, 2, "TSRT"),
+             rng.standard_normal((60, 2)).astype(np.float32))
+            for _ in range(8)]                    # one matrix bucket, lpad=64
+    srv = _fresh_server(backend="ref")
+    with opcount.counting() as records:
+        srv.serve(reqs)
+    serve_records = [r for r in records if r[0].startswith("serve_bucket_")]
+    assert len(serve_records) == serving.stats["launches"] == 1
+    (_, nbytes), = serve_records
+    assert nbytes == opcount.packed_chain_bytes(8, 64, 2, kind="matrix")
+    # the batched launch moves padded bytes, but still strictly fewer than
+    # 8 requests x k=4 primitives of sequential per-primitive dispatch
+    sequential = 8 * 4 * 2 * (60 * 2 * 4)
+    assert nbytes < sequential

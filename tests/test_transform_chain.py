@@ -208,6 +208,34 @@ def test_plan_cache_hit_no_retrace():
     assert tc.stats["compiles"] == 2
 
 
+def test_apply_differentiable_through_traced_params():
+    """grad/jit over chain *parameters* (pose optimisation) must work: the
+    host fold only serves concrete parameters; traced ones fold in jnp
+    inside the caller's trace."""
+    import jax
+
+    pts = jnp.asarray(RNG.standard_normal((12, 2)), jnp.float32)
+
+    def loss(theta):
+        chain = (tc.TransformChain.identity(2)
+                 .rotate(theta).translate(1.0, 2.0))
+        return chain.apply(pts).sum()
+
+    g = jax.grad(loss)(0.3)
+    # d/dtheta sum(p @ R(theta) + t) has a closed form via R'(theta)
+    c, s = np.cos(0.3), np.sin(0.3)
+    dr = np.array([[-s, c], [-c, -s]], np.float32)
+    expect = (np.asarray(pts) @ dr).sum()
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-4, atol=1e-4)
+    # jit over parameters traces the jnp fold path, same values
+    out = jax.jit(lambda th: (tc.TransformChain.identity(2)
+                              .rotate(th).translate(1.0, 2.0)).apply(pts))(0.3)
+    eager = (tc.TransformChain.identity(2)
+             .rotate(0.3).translate(1.0, 2.0)).apply(pts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_builder_is_lazy_until_apply():
     """then_* / builder calls must do no kernel dispatch (satellite: the old
     Transform2D ran an eager ref matmul per builder call)."""

@@ -1,0 +1,62 @@
+"""Docs link checker: every relative markdown link must resolve.
+
+Scans the given markdown files (or every ``*.md`` under given
+directories) for ``[text](target)`` links, skips absolute URLs and
+anchors, and verifies each remaining target exists relative to the file
+that references it.  CI runs this over README.md, docs/, tests/ and
+benchmarks/ so documentation cannot point at files that moved or never
+existed.
+
+    python tools/check_docs.py README.md docs tests/README.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def collect(paths: list[str]) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        else:
+            files.append(path)
+    return files
+
+
+def check(files: list[pathlib.Path]) -> list[str]:
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in _LINK.findall(line):
+                if target.startswith(_SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                if not (md.parent / rel).exists():
+                    errors.append(f"{md}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = collect(argv or ["README.md", "docs"])
+    errors = check(files)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if errors else 'all links resolve'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
