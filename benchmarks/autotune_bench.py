@@ -1,0 +1,97 @@
+"""Autotune benchmark: tuned vs default launch parameters, same workload.
+
+``benchmarks/run.py --autotune`` runs this module: one seeded mixed
+workload (bit-identical request mix for both sides -- the SAME seeded
+workloads ``repro.autotune.search`` tunes on, so the cache entry is a
+grid tuned for exactly this traffic) is served through the GeometryServer
+twice, once under the deterministic default size grid and once under the
+tuned grid from the tuning cache (the committed ``default_cache.json``
+winners at this workload's size class, or a fresh pruned search when the
+cache has no such entry).  The rows record launches, padding, and
+wall-clock for each side, so ``BENCH_<ts>.json`` captures
+tuned-vs-default as data, not prose:
+
+  * ``autotune_serving_default`` -- default grid (min_len=8, cap=0.5);
+  * ``autotune_serving_tuned``   -- tuned grid, with ``launches_saved``
+    and ``speedup_vs_default`` derived fields and the exact config used.
+
+A third row, ``autotune_model_residual``, records the cost model's
+predicted launch ratio next to the measured one -- the paper's
+predict-then-validate loop applied to the tuner itself.
+"""
+from __future__ import annotations
+
+from repro import serving
+from repro.autotune import cache as tcache
+from repro.autotune import costmodel, search
+from repro.serving.workload import timed as _timed
+
+
+def _serve_stats(reqs, backend: str, min_len: int, waste_cap: float,
+                 iters: int):
+    """Best-of-``iters`` wall-clock + per-flush launch/padding stats for
+    one grid configuration (explicit knobs: the cache is bypassed)."""
+    srv = serving.GeometryServer(backend=backend, min_len=min_len,
+                                 waste_cap=waste_cap)
+    srv.serve(reqs)                              # warm plans + jit shapes
+    serving.reset_stats()
+    best = min(_timed(lambda: srv.serve(reqs)) for _ in range(iters))
+    st = serving.stats
+    launches = st["launches"] // iters
+    padded = st["padded_points"] // iters
+    payload = st["payload_points"] // iters
+    return best, launches, payload, padded
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    iters = 2 if smoke else 5
+    reqs = search.smoke_workload() if smoke else search.bench_workload()
+    n_requests = len(reqs)
+    backend = "ref"
+
+    default = tcache.DEFAULTS["serving_grid"]
+    # the committed winner for THIS workload's size class (grids are
+    # tuned per traffic scale); tune fresh if the cache has none
+    tuned = tcache.the_cache().get("serving_grid", backend, "float32",
+                                   search.workload_size_class_n(reqs))
+    if tuned is None:
+        rep = search.tune_serving_grid(reqs, backend, iters=iters)
+        tuned = rep.winner
+
+    d_us, d_launch, payload, d_pad = _serve_stats(
+        reqs, backend, default.grid_min_len, default.grid_waste_cap, iters)
+    t_us, t_launch, _, t_pad = _serve_stats(
+        reqs, backend, tuned.grid_min_len, tuned.grid_waste_cap, iters)
+
+    # predicted launch economy from the cost model, for the residual row
+    shape = costmodel.workload_shape(reqs)
+    pred_d = costmodel.grid_cost(shape, default.grid_min_len,
+                                 default.grid_waste_cap)
+    pred_t = costmodel.grid_cost(shape, tuned.grid_min_len,
+                                 tuned.grid_waste_cap)
+
+    rows = [
+        f"autotune_serving_default{tag},{d_us * 1e6:.1f},"
+        f"requests={n_requests};launches={d_launch};"
+        f"padded_points={d_pad};payload_points={payload};"
+        f"config={default.describe()}",
+        f"autotune_serving_tuned{tag},{t_us * 1e6:.1f},"
+        f"requests={n_requests};launches={t_launch};"
+        f"launches_saved={d_launch - t_launch};"
+        f"padded_points={t_pad};"
+        f"speedup_vs_default={d_us / t_us:.2f}x;"
+        f"config={tuned.describe()}",
+        f"autotune_model_residual{tag},{t_us * 1e6:.1f},"
+        f"predicted_launches_default={pred_d.launches};"
+        f"predicted_launches_tuned={pred_t.launches};"
+        f"measured_launches_default={d_launch};"
+        f"measured_launches_tuned={t_launch};"
+        f"model_launches_exact={pred_d.launches == d_launch and pred_t.launches == t_launch}",
+    ]
+    print(f"[autotune] {n_requests} requests: default grid "
+          f"{d_us * 1e3:.1f} ms / {d_launch} launches vs tuned "
+          f"{t_us * 1e3:.1f} ms / {t_launch} launches "
+          f"({tuned.describe()}) -> {d_us / t_us:.2f}x, "
+          f"{d_launch - t_launch} launches saved")
+    return rows

@@ -28,9 +28,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import kernels
+from repro.autotune import cache as tuning
 from repro.core import transform_chain as tc
 from repro.core import transform_engine as te
+from repro.kernels import dispatch
 from repro.roofline import HBM_BW
+
+
+def _cfg_tag(kernel: str, dtype: str, n: int) -> str:
+    """Which launch config this row used: the same tuning-cache lookup the
+    kernel itself performs (``default(...)`` when autotuning is off,
+    ``cached(...)``/``tuned(...)`` winners otherwise)."""
+    return tuning.config_for(kernel, dispatch.resolve(None), dtype,
+                             n).describe()
 
 
 def _time(fn, *args, iters: int = 20) -> float:
@@ -71,7 +81,8 @@ def _chain_rows(rng, *, n_points: int, iters: int, tag: str) -> list[str]:
     us_fused = _time(chain.apply, pts, iters=iters)   # plan-cache hits
     rows.append(f"chain_fused_len4{tag},{us_fused:.1f},"
                 f"elems_per_us={pts.size / us_fused:.0f};hbm_passes=1;"
-                f"speedup_vs_sequential={us_seq / us_fused:.2f}x")
+                f"speedup_vs_sequential={us_seq / us_fused:.2f}x;"
+                f"config={_cfg_tag('chain_apply', 'float32', n_points)}")
     rows.append(f"chain_plan_cache{tag},{us_fused:.1f},"
                 f"cold_us={cold_us:.1f};"
                 f"cachehit_speedup={cold_us / us_fused:.1f}x")
@@ -88,7 +99,8 @@ def _chain_rows(rng, *, n_points: int, iters: int, tag: str) -> list[str]:
     rows.append(f"chain_fused_diag_len3{tag},{us_diag:.1f},"
                 f"elems_per_us={pts.size / us_diag:.0f};plan=diag_no_mxu;"
                 f"sequential_us={us_seq_d:.1f};"
-                f"speedup_vs_sequential={us_seq_d / us_diag:.2f}x")
+                f"speedup_vs_sequential={us_seq_d / us_diag:.2f}x;"
+                f"config={_cfg_tag('chain_diag', 'float32', n_points)}")
     return rows
 
 
@@ -141,13 +153,15 @@ def run(smoke: bool = False) -> list[str]:
     us = _time(mm, a, b, iters=iters)
     fl = 2 * mm_n ** 3
     rows.append(f"kernel_matmul{tag},{us:.1f},"
-                f"gflops_cpu={fl/us/1e3:.1f};tpu_projection_us={fl/197e12*1e6:.1f}")
+                f"gflops_cpu={fl/us/1e3:.1f};tpu_projection_us={fl/197e12*1e6:.1f};"
+                f"config={_cfg_tag('matmul', 'bfloat16', mm_n * mm_n)}")
 
     # rmsnorm fused (derived-scalar scaling)
     g = jnp.ones((n,), jnp.float32)
     rn = jax.jit(lambda p: kernels.rmsnorm(p, g))
     us = _time(rn, x, iters=iters)
-    rows.append(f"kernel_rmsnorm{tag},{us:.1f},elems_per_us={x.size/us:.0f}")
+    rows.append(f"kernel_rmsnorm{tag},{us:.1f},elems_per_us={x.size/us:.0f};"
+                f"config={_cfg_tag('rmsnorm', 'float32', x.size)}")
 
     # blockwise attention (composite), causal
     seq = 256 if smoke else 4096

@@ -8,8 +8,12 @@ the perf trajectory across PRs is preserved, not just printed.  Invoke:
 
 ``--smoke`` runs a seconds-long liveness subset (paper tables + tiny-shape
 kernel + serving rows, roofline skipped) -- the CI pass; see
-benchmarks/PERF.md.  ``--out`` overrides the JSON path (``--out ''``
-disables the record, which is what CI does to keep runners stateless).
+benchmarks/PERF.md.  ``--autotune`` additionally records tuned-vs-default
+rows (``autotune_serving_*``: same seeded workload served under the
+default size grid and under the tuning-cache winner, with launch counts
+and speedup as derived fields).  ``--out`` overrides the JSON path
+(``--out ''`` disables the record, which is what CI does to keep runners
+stateless).
 """
 from __future__ import annotations
 
@@ -57,6 +61,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes / few iters; CI liveness check")
+    ap.add_argument("--autotune", action="store_true",
+                    help="record tuned-vs-default serving rows "
+                         "(tuning-cache winners vs the deterministic "
+                         "default grid, same seeded workload)")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -67,8 +75,8 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
-    from benchmarks import (kernel_bench, paper_tables, roofline_bench,
-                            serving_bench)
+    from benchmarks import (autotune_bench, kernel_bench, paper_tables,
+                            roofline_bench, serving_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -77,6 +85,9 @@ def main(argv=None) -> None:
     rows += kernel_bench.run(smoke=args.smoke)
     print("\n== transform serving (batched buckets vs per-request dispatch) ==")
     rows += serving_bench.run(smoke=args.smoke)
+    if args.autotune:
+        print("\n== autotune (tuned vs default launch parameters) ==")
+        rows += autotune_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

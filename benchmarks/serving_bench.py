@@ -25,10 +25,12 @@ from repro.serving import workload
 from repro.serving.workload import timed as _timed
 
 
-def _build_workload(n_requests: int, max_points: int, n_templates: int):
-    rng = np.random.default_rng(7)
+def _build_workload(n_requests: int, max_points: int, n_templates: int,
+                    seed: int = 7):
+    # explicit end-to-end seed: the same (seed, args) always yields a
+    # bit-identical request mix (see repro.serving.workload)
     return workload.random_workload(
-        rng, n_requests, max_points=max_points,
+        seed=seed, n_requests=n_requests, max_points=max_points,
         templates=workload.TEMPLATES[:n_templates])
 
 

@@ -11,7 +11,11 @@ checked against its own per-request ``TransformChain.apply``.
     PYTHONPATH=src python examples/serve_transforms.py --smoke   # CI
 
 ``--smoke`` shrinks the workload so CI can execute this documented command
-in seconds.
+in seconds.  ``--autotune`` turns on the tuning cache
+(``repro.autotune.set_enabled``): the server's size grid and the chain
+kernels' launch parameters come from the committed winners file instead
+of the hardcoded defaults -- results are identical either way (the knobs
+steer staging, never arithmetic), only the schedule changes.
 """
 import argparse
 
@@ -51,7 +55,14 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload; what CI runs")
+    ap.add_argument("--autotune", action="store_true",
+                    help="serve under the tuning-cache size grid instead "
+                         "of the default (results are bit-compatible; "
+                         "the launch schedule changes)")
     args = ap.parse_args()
+    if args.autotune:
+        import repro.autotune
+        repro.autotune.set_enabled(True)
     n_requests = 12 if args.smoke else args.requests
     max_pts = 64 if args.smoke else 512
 

@@ -1,0 +1,69 @@
+"""Autotune subsystem: analytic cost models + on-device search.
+
+Closes the paper's performance-analysis loop for the TPU mapping: instead
+of hardcoded launch parameters, every tunable kernel (the chain kernels,
+``matmul``, ``rmsnorm``) and the serving engine's size-bucket grid can be
+driven from a persisted tuning cache:
+
+    candidate space --analytic prune--> survivors --empirical timer-->
+    winner --JSON cache--> consulted at plan-build / trace time
+
+Three layers (matching the subsystem design):
+
+  * ``costmodel``  -- closed-form HBM-byte / FLOP / launch-overhead models
+    sharing the ``kernels.opcount`` accounting, printable in the paper's
+    table format and cross-checked against the MorphoSys cycle emulator;
+  * ``search`` + ``cache`` -- candidate generation, pruning, the
+    best-of-iters timer, and the JSON winners cache keyed by
+    (kernel, backend, dtype, size-class);
+  * integration -- ``core.transform_chain`` plans, the serving engine's
+    batch plans and size grid, and ``ops.matmul``/``ops.rmsnorm`` consult
+    ``config_for`` when tuning is enabled.
+
+Tuning is OFF by default: ``config_for`` then returns the deterministic
+``DEFAULTS`` (the historical hardcoded values), so nothing changes until
+``repro.autotune.set_enabled(True)`` (or ``REPRO_AUTOTUNE=1``).  A
+committed ref-backend winners file (``default_cache.json``) means enabling
+tuning never requires a tuning run.  CLI::
+
+    python -m repro.autotune --smoke            # pruned search, 2 shapes
+    python -m repro.autotune --smoke --check    # CI: regression vs cache
+"""
+from __future__ import annotations
+
+from repro.autotune.cache import (DEFAULT_CACHE_PATH, DEFAULTS, KernelConfig,
+                                  TuningCache, cache_key, config_for, enabled,
+                                  set_cache, set_cache_path, size_class,
+                                  the_cache)
+
+__all__ = [
+    "DEFAULT_CACHE_PATH", "DEFAULTS", "KernelConfig", "TuningCache",
+    "cache_key", "config_for", "enabled", "set_cache", "set_cache_path",
+    "set_enabled", "size_class", "the_cache", "smoke_search", "tune_chain",
+    "tune_serving_grid", "tune_matmul", "tune_rmsnorm",
+]
+
+
+def set_enabled(on: bool | None) -> None:
+    """Enable/disable cache consultation process-wide AND drop the chain /
+    serving plan caches: compiled plans capture their kernel config at
+    trace time, so a stale plan would keep the old config alive."""
+    from repro.autotune import cache as _cache
+    _cache.set_enabled(on)
+    from repro.core import transform_chain
+    from repro.serving import engine
+    transform_chain.clear_plan_cache()
+    engine.clear_plan_cache()
+
+
+def __getattr__(name: str):
+    # search (and through it jax/kernels) loads lazily so that importing
+    # repro.autotune.cache from kernel ops modules stays cycle-free
+    if name in ("smoke_search", "tune_chain", "tune_serving_grid",
+                "tune_matmul", "tune_rmsnorm"):
+        from repro.autotune import search
+        return getattr(search, name)
+    if name in ("costmodel", "search"):
+        import importlib
+        return importlib.import_module(f"repro.autotune.{name}")
+    raise AttributeError(f"module 'repro.autotune' has no attribute {name!r}")

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune import cache as tuning
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import chain_diag as _k_chain_diag
 from repro.kernels.matmul import chain_apply as _k_chain_apply
@@ -248,16 +249,28 @@ def _compile(structure: tuple, backend: str) -> Plan:
     dim, kinds = structure
     diagonal = structure_is_diagonal(structure)
 
+    # The tuning-cache consult happens inside the plan body, i.e. at
+    # TRACE time: point shapes are concrete there, so the lookup keys on
+    # the actual size class, and a cached plan applied at a seen shape
+    # re-consults nothing (the config is baked into the trace, which is
+    # why ``repro.autotune.set_enabled`` clears the plan cache).  With
+    # tuning disabled this returns the deterministic defaults; any config
+    # is bit-identical (staging-only knobs), so tuned and untuned plans
+    # agree bitwise.
     if diagonal:
         def body(folded, pts2):
             stats["traces"] += 1
             s, t = folded
-            return _k_chain_diag(pts2, s, t, backend=backend)
+            cfg = tuning.config_for("chain_diag", backend,
+                                    str(pts2.dtype), pts2.shape[0])
+            return _k_chain_diag(pts2, s, t, backend=backend, config=cfg)
     else:
         def body(folded, pts2):
             stats["traces"] += 1
             a, t = folded
-            return _k_chain_apply(pts2, a, t, backend=backend)
+            cfg = tuning.config_for("chain_apply", backend,
+                                    str(pts2.dtype), pts2.shape[0])
+            return _k_chain_apply(pts2, a, t, backend=backend, config=cfg)
 
     return Plan(kind="diag" if diagonal else "matrix", dim=dim,
                 backend=backend, length=len(kinds), fn=jax.jit(body))
@@ -404,15 +417,18 @@ class TransformChain:
         if not self.kinds:
             return points
         flat = points.reshape(-1, d)
-        param_bytes = 4 * (d * d + d)           # composed (A, t) operands
         if _params_traced(self.params):
             # chain parameters are jax tracers (grad/jit over a pose):
             # fold in jnp inside the caller's trace, differentiably
-            opcount.record("chain_fused_traced", 2 * flat.nbytes + param_bytes)
+            opcount.record("chain_fused_traced",
+                           2 * flat.nbytes + 4 * (d * d + d))
             a, t = _fold_jnp(d, self.kinds, self.params)
             out = _k_chain_apply(flat, a, t, backend=backend)
             return out.reshape(points.shape)
         plan = self._plan(backend)
+        # composed-parameter words: (A, t) for matrix plans, (s, t) for
+        # diagonal -- the same accounting costmodel.chain_cost predicts
+        param_bytes = 4 * (d * d + d if plan.kind == "matrix" else 2 * d)
         opcount.record(f"chain_fused_{plan.kind}",
                        2 * flat.nbytes + param_bytes)
         out = plan.fn(self.fold(), flat)

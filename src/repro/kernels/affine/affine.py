@@ -77,9 +77,12 @@ def _chain_diag_kernel(x_ref, s_ref, t_ref, o_ref):
     o_ref[...] = x_ref[...] * s_ref[...] + t_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("d", "interpret", "block_rows",
+                                              "lane_target"))
 def chain_diag_1d(flat: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
-                  *, d: int, interpret: bool = False) -> jnp.ndarray:
+                  *, d: int, interpret: bool = False,
+                  block_rows: int | None = None,
+                  lane_target: int | None = None) -> jnp.ndarray:
     """Folded diagonal chain on the flat point buffer: y = s*x + t per coord.
 
     ``flat`` is an (N*d,) view of an (N, d) point array; ``s``/``t`` are
@@ -87,11 +90,15 @@ def chain_diag_1d(flat: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
     ``w = chain_width(d)`` lanes (w a multiple of d, so points never
     straddle a block edge) and the d-periodic parameter pattern is tiled
     into (1, w) context-word rows staged once per block.
+    ``block_rows``/``lane_target`` are the autotuner's launch parameters
+    (``None`` = historical defaults); they steer staging only, never
+    arithmetic, so every configuration is bit-identical.
     """
     (l,) = flat.shape
     if l == 0:
         return flat
-    xp, lane_coord, bm, w = stage_flat(flat, d)
+    xp, lane_coord, bm, w = stage_flat(flat, d, block_rows=block_rows,
+                                       lane_target=lane_target)
     srow = s.astype(flat.dtype)[lane_coord].reshape(1, w)
     trow = t.astype(flat.dtype)[lane_coord].reshape(1, w)
     out = pl.pallas_call(
@@ -118,9 +125,10 @@ def _chain_diag_batch_kernel(x_ref, s_ref, t_ref, o_ref, *, g: int):
     o_ref[...] = (x3 * s + t).reshape(bm, wr)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def chain_diag_batch_2d(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
-                        *, interpret: bool = False) -> jnp.ndarray:
+                        *, interpret: bool = False,
+                        block_rows: int | None = None) -> jnp.ndarray:
     """Batched folded diagonal chains: q[b] = s[b] (.) p[b] + t[b].
 
     ``pts3`` is a packed (B, L, d) batch (one serving request per row,
@@ -129,12 +137,13 @@ def chain_diag_batch_2d(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray,
     body as ``chain_diag_1d``, but the context-word parameter rows are
     *row-aligned* rather than broadcast: request b's block row meets
     request b's (g,)-tiled parameters, so B heterogeneous requests are
-    one kernel launch.
+    one kernel launch.  ``block_rows`` pins the batch-axis block (the
+    autotuner's knob; ``None`` = VMEM-budget heuristic).
     """
     b, l, d = pts3.shape
     if b == 0 or l == 0:
         return pts3
-    xp, lane_coord, bm, g = stage_packed(pts3, d)
+    xp, lane_coord, bm, g = stage_packed(pts3, d, block_rows=block_rows)
     srow = pad_axis(s.astype(pts3.dtype)[:, lane_coord], 0, bm)     # (Bp, g)
     trow = pad_axis(t.astype(pts3.dtype)[:, lane_coord], 0, bm)
     out = pl.pallas_call(

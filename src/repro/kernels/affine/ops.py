@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.autotune.cache import KernelConfig
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import affine as K
 from repro.kernels.affine import ref
@@ -61,8 +62,8 @@ def vecadd(x: jnp.ndarray, z: jnp.ndarray, *, backend: str | None = None) -> jnp
     return out.reshape(x.shape)
 
 
-def chain_diag(points: jnp.ndarray, s, t, *,
-               backend: str | None = None) -> jnp.ndarray:
+def chain_diag(points: jnp.ndarray, s, t, *, backend: str | None = None,
+               config: KernelConfig | None = None) -> jnp.ndarray:
     """Folded diagonal transform chain q = s (.) p + t in one fused pass.
 
     ``points`` is (..., d); ``s``/``t`` are scalars or (d,) per-coordinate
@@ -70,7 +71,10 @@ def chain_diag(points: jnp.ndarray, s, t, *,
     HBM read of the points, one write, never touches the MXU.  This is
     the lowering target for diagonal ``TransformChain`` plans; byte
     accounting for the chain as a whole happens in ``TransformChain.apply``
-    (this entry is called under jit inside the compiled plan).
+    (this entry is called under jit inside the compiled plan).  ``config``
+    carries tuned launch parameters (the chain compiler consults the
+    tuning cache at plan-trace time); ``None`` means the deterministic
+    defaults, and any config is bit-identical to any other.
     """
     b = dispatch.resolve(backend)
     d = points.shape[-1]
@@ -78,13 +82,17 @@ def chain_diag(points: jnp.ndarray, s, t, *,
     t = jnp.broadcast_to(jnp.asarray(t, points.dtype), (d,))
     if b == "ref":
         return ref.chain_diag(points, s, t)
+    cfg = config or KernelConfig("chain_diag")
     out = K.chain_diag_1d(points.reshape(-1), s, t, d=d,
-                          interpret=(b == "interpret"))
+                          interpret=(b == "interpret"),
+                          block_rows=cfg.block_rows,
+                          lane_target=cfg.lane_target)
     return out.reshape(points.shape)
 
 
 def chain_diag_batch(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray, *,
-                     backend: str | None = None) -> jnp.ndarray:
+                     backend: str | None = None,
+                     config: KernelConfig | None = None) -> jnp.ndarray:
     """Batched folded diagonal chains: q[b] = s[b] (.) p[b] + t[b].
 
     ``pts3`` is a packed (B, L, d) batch -- one serving request per row,
@@ -102,4 +110,6 @@ def chain_diag_batch(pts3: jnp.ndarray, s: jnp.ndarray, t: jnp.ndarray, *,
     b = dispatch.resolve(backend)
     if b == "ref":
         return jax.vmap(ref.chain_diag)(pts3, s, t)
-    return K.chain_diag_batch_2d(pts3, s, t, interpret=(b == "interpret"))
+    cfg = config or KernelConfig("chain_diag_batch")
+    return K.chain_diag_batch_2d(pts3, s, t, interpret=(b == "interpret"),
+                                 block_rows=cfg.block_rows)

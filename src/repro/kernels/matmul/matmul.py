@@ -94,14 +94,23 @@ def _chain_matrix_kernel(x_ref, c_ref, t_ref, o_ref, *, d: int):
     o_ref[...] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("d", "interpret"))
+@functools.partial(jax.jit, static_argnames=("d", "interpret", "block_rows",
+                                              "lane_target"))
 def chain_matrix_1d(flat: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
-                    *, d: int, interpret: bool = False) -> jnp.ndarray:
-    """Fused q = p @ A + t on the flat (N*d,) point buffer; A (d, d), t (d,)."""
+                    *, d: int, interpret: bool = False,
+                    block_rows: int | None = None,
+                    lane_target: int | None = None) -> jnp.ndarray:
+    """Fused q = p @ A + t on the flat (N*d,) point buffer; A (d, d), t (d,).
+
+    ``block_rows``/``lane_target`` are the autotuner's launch parameters
+    (``None`` = historical defaults).  They steer staging only; the 2d-1
+    rolled-MAC schedule per lane is identical under any staging, so every
+    configuration produces bit-identical results."""
     (l,) = flat.shape
     if l == 0:
         return flat
-    xp, lane_coord, bm, w = stage_flat(flat, d)
+    xp, lane_coord, bm, w = stage_flat(flat, d, block_rows=block_rows,
+                                       lane_target=lane_target)
     coef = pad_axis(_coef_rows(a.astype(flat.dtype), lane_coord, d),
                     0, SUBLANES)                            # (8, w)
     trow = t.astype(flat.dtype)[lane_coord].reshape(1, w)
@@ -145,9 +154,10 @@ def _chain_matrix_batch_kernel(x_ref, c_ref, t_ref, o_ref, *, d: int, g: int):
     o_ref[...] = acc.reshape(bm, wr)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
 def chain_matrix_batch_2d(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
-                          *, interpret: bool = False) -> jnp.ndarray:
+                          *, interpret: bool = False,
+                          block_rows: int | None = None) -> jnp.ndarray:
     """Batched folded general chains: q[b] = p[b] @ A[b] + t[b].
 
     ``pts3`` is a packed (B, L, d) batch (one serving request per row,
@@ -157,11 +167,13 @@ def chain_matrix_batch_2d(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray,
     mix requests, and wrapped lanes always meet a zero coefficient -- but
     the coefficient rows are *row-aligned* (request b's block row meets
     request b's coefficients), making a whole plan bucket one launch.
+    ``block_rows`` pins the batch-axis block (the autotuner's knob;
+    ``None`` = VMEM-budget heuristic).
     """
     b, l, d = pts3.shape
     if b == 0 or l == 0:
         return pts3
-    xp, lane_coord, bm, g = stage_packed(pts3, d)
+    xp, lane_coord, bm, g = stage_packed(pts3, d, block_rows=block_rows)
     coef = jax.vmap(lambda ab: _coef_rows(ab, lane_coord, d))(
         a.astype(pts3.dtype))                        # (B, 2d-1, g)
     coef = pad_axis(coef.reshape(b, (2 * d - 1) * g), 0, bm)

@@ -4,20 +4,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.autotune import cache as tuning
+from repro.autotune.cache import KernelConfig
 from repro.kernels import dispatch, opcount
 from repro.kernels.matmul import matmul as K
 from repro.kernels.matmul import ref
 
 
 def matmul(x: jnp.ndarray, y: jnp.ndarray, *, backend: str | None = None,
-           out_dtype=None, bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
-    """C = X @ Y with fp32 accumulation; X rank >= 2 (leading dims batched)."""
+           out_dtype=None, bm: int | None = None, bn: int | None = None,
+           bk: int | None = None) -> jnp.ndarray:
+    """C = X @ Y with fp32 accumulation; X rank >= 2 (leading dims batched).
+
+    Tile shape: explicit ``bm``/``bn``/``bk`` win; otherwise the tuning
+    cache is consulted when autotuning is enabled, else the MXU-native
+    (128, 128, 512) defaults.  Tile choice never changes results -- the
+    contraction accumulates in the same fp32 VMEM scratch per output tile.
+    """
     out_itemsize = jnp.dtype(out_dtype or x.dtype).itemsize
     out_elems = x.size // x.shape[-1] * y.shape[-1]
     opcount.record("matmul", x.nbytes + y.nbytes + out_elems * out_itemsize)
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.matmul(x, y, out_dtype=out_dtype)
+    if bm is None or bn is None or bk is None:
+        cfg = tuning.config_for("matmul", b, str(jnp.dtype(x.dtype)),
+                                out_elems)
+        bm, bn, bk = bm or cfg.bm or 128, bn or cfg.bn or 128, \
+            bk or cfg.bk or 512
     lead = x.shape[:-2]
     x2 = x.reshape(-1, x.shape[-1]) if lead else x
     out = K.matmul_2d(x2, y, bm=bm, bn=bn, bk=bk,
@@ -35,7 +49,8 @@ def rotate2d(points: jnp.ndarray, theta, *, backend: str | None = None) -> jnp.n
 
 
 def chain_apply(points: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
-                backend: str | None = None) -> jnp.ndarray:
+                backend: str | None = None,
+                config: KernelConfig | None = None) -> jnp.ndarray:
     """Folded transform chain q = p @ A + t in one fused pass.
 
     ``points`` is (..., d); ``a`` is the composed (d, d) linear part and
@@ -52,13 +67,17 @@ def chain_apply(points: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
     t = jnp.asarray(t)
     if b == "ref":
         return ref.chain_matrix(points, a, t)
+    cfg = config or KernelConfig("chain_apply")
     out = K.chain_matrix_1d(points.reshape(-1), a, t, d=d,
-                            interpret=(b == "interpret"))
+                            interpret=(b == "interpret"),
+                            block_rows=cfg.block_rows,
+                            lane_target=cfg.lane_target)
     return out.reshape(points.shape)
 
 
 def chain_apply_batch(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
-                      backend: str | None = None) -> jnp.ndarray:
+                      backend: str | None = None,
+                      config: KernelConfig | None = None) -> jnp.ndarray:
     """Batched folded general chains: q[b] = p[b] @ A[b] + t[b].
 
     ``pts3`` is a packed (B, L, d) batch -- one serving request per row,
@@ -76,4 +95,6 @@ def chain_apply_batch(pts3: jnp.ndarray, a: jnp.ndarray, t: jnp.ndarray, *,
     t = jnp.asarray(t)
     if b == "ref":
         return jax.vmap(ref.chain_matrix)(pts3, a, t)
-    return K.chain_matrix_batch_2d(pts3, a, t, interpret=(b == "interpret"))
+    cfg = config or KernelConfig("chain_apply_batch")
+    return K.chain_matrix_batch_2d(pts3, a, t, interpret=(b == "interpret"),
+                                   block_rows=cfg.block_rows)

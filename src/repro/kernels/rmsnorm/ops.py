@@ -3,24 +3,33 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.autotune import cache as tuning
+from repro.autotune.cache import KernelConfig
 from repro.kernels import dispatch
 from repro.kernels.rmsnorm import ref
 from repro.kernels.rmsnorm import rmsnorm as K
 
 
 def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, *, eps: float = 1e-6,
-            backend: str | None = None) -> jnp.ndarray:
+            backend: str | None = None,
+            config: KernelConfig | None = None) -> jnp.ndarray:
     """y = x / rms(x) * gain over the trailing dim of ``x`` (any rank).
 
     The paper's vector-scalar scaling with a *derived* scalar: the scale
     factor is computed from the row itself and fused into the same pass,
     so the row is read once.  ``gain`` is (N,); backend per
-    ``repro.kernels.dispatch``.
+    ``repro.kernels.dispatch``.  Row-block size: explicit ``config``
+    wins; otherwise the tuning cache is consulted when autotuning is
+    enabled (rows normalise independently, so the block never changes
+    results).
     """
     b = dispatch.resolve(backend)
     if b == "ref":
         return ref.rmsnorm(x, gain, eps)
     n = x.shape[-1]
+    cfg = config or tuning.config_for("rmsnorm", b, str(jnp.dtype(x.dtype)),
+                                      x.size)
     out = K.rmsnorm_2d(x.reshape(-1, n), gain, eps=eps,
-                       interpret=(b == "interpret"))
+                       interpret=(b == "interpret"),
+                       block_rows=cfg.block_rows)
     return out.reshape(x.shape)

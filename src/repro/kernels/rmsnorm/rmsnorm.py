@@ -28,11 +28,16 @@ def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
     o_ref[...] = (x * inv * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("eps", "interpret",
+                                              "block_rows"))
 def rmsnorm_2d(x: jnp.ndarray, gain: jnp.ndarray, *, eps: float = 1e-6,
-               interpret: bool = False) -> jnp.ndarray:
+               interpret: bool = False,
+               block_rows: int | None = None) -> jnp.ndarray:
+    """``block_rows`` is the autotuner's row-block knob (``None`` = the
+    historical 256); rows normalise independently, so the block choice
+    never changes arithmetic."""
     m, n = x.shape
-    bm = pick_block(m, 256, SUBLANES)
+    bm = pick_block(m, block_rows or 256, SUBLANES)
     xp = pad_axis(x, 0, bm)
     out = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),

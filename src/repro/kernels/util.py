@@ -35,6 +35,23 @@ def pick_block(dim: int, preferred: int, align: int) -> int:
     return preferred
 
 
+def lane_group(d: int) -> int:
+    """lcm(d, LANES): the smallest lane width at which a d-wide point
+    pattern is periodic and no point straddles a row edge.  The one
+    source of truth for this quantity -- the chain stagers AND the
+    autotune cost model build on it, so they cannot drift apart."""
+    return d * LANES // math.gcd(d, LANES)
+
+
+def packed_budget_rows(wr: int, itemsize: int) -> int:
+    """Batch-axis block-row heuristic for ``stage_packed``: as many
+    sublane-aligned rows as keep one ``wr``-lane input block inside a
+    2 MiB VMEM budget (shared with the autotune cost model's feasibility
+    and step accounting)."""
+    budget_rows = max(1, (1 << 21) // (wr * max(1, itemsize)))
+    return max(SUBLANES, budget_rows // SUBLANES * SUBLANES)
+
+
 def chain_width(d: int, target: int = 512) -> int:
     """Lane width for the flattened point-buffer chain kernels.
 
@@ -42,48 +59,56 @@ def chain_width(d: int, target: int = 512) -> int:
     flat buffer reshaped to rows of ``w`` lanes, so ``w`` must be a
     multiple of both the lane count (alignment) and ``d`` (no point may
     straddle a row/block edge).  The smallest such width is
-    lcm(d, LANES), scaled up toward ``target`` lanes per row.
+    lcm(d, LANES), scaled up toward ``target`` lanes per row.  ``target``
+    is the autotuner's lane-packing knob (``KernelConfig.lane_target``).
     """
-    base = d * LANES // math.gcd(d, LANES)
+    base = lane_group(d)
     return base * max(1, target // base)
 
 
-def stage_flat(flat: jnp.ndarray, d: int):
+def stage_flat(flat: jnp.ndarray, d: int, *, block_rows: int | None = None,
+               lane_target: int | None = None):
     """Stage a flat (N*d,) point buffer for the chain kernels: pad and
     reshape to (rows_p, w) blocks of ``w = chain_width(d)`` lanes and
     return ``(xp, lane_coord, bm, w)`` where ``lane_coord[j] = j % d`` is
     the coordinate index of each lane (for building d-periodic parameter
     rows).  Shared by ``chain_diag_1d`` and ``chain_matrix_1d`` so the
-    blocking/padding discipline cannot diverge between them."""
+    blocking/padding discipline cannot diverge between them.
+    ``block_rows``/``lane_target`` are the tuned launch parameters;
+    ``None`` keeps the historical defaults (256-row blocks, ~512 lanes).
+    Block choice never changes arithmetic -- the per-lane op sequence is
+    identical under any staging, so tuned and default results are
+    bit-identical."""
     (l,) = flat.shape
-    w = chain_width(d)
+    w = chain_width(d, target=lane_target or 512)
     rows = cdiv(l, w)
-    bm = pick_block(rows, 256, SUBLANES)
+    bm = pick_block(rows, block_rows or 256, SUBLANES)
     rows_p = round_up(rows, bm)
     xp = jnp.pad(flat, (0, rows_p * w - l)).reshape(rows_p, w)
     lane_coord = jnp.arange(w) % d
     return xp, lane_coord, bm, w
 
 
-def stage_packed(pts3: jnp.ndarray, d: int):
+def stage_packed(pts3: jnp.ndarray, d: int, *, block_rows: int | None = None):
     """Stage a packed (B, L, d) point batch for the batched chain kernels.
 
     Each batch row is one request's flat point buffer (the serving engine's
     pack/pad product).  Rows are padded to ``wr`` lanes where ``wr`` is a
     multiple of ``g = lcm(d, LANES)`` -- so the per-coordinate parameter
     pattern is ``g``-periodic along every row and no point straddles a row
-    edge -- and the batch dim is padded to a ``bm``-row block.  ``bm``
-    shrinks as rows widen so an input block stays within a fixed VMEM
-    budget (oversized single rows are the serving engine's shard cap's
-    problem, not this stager's).  Returns ``(xp (Bp, wr), lane_coord (g,),
-    bm, g)`` with ``lane_coord[j] = j % d``.
+    edge -- and the batch dim is padded to a ``bm``-row block.  With
+    ``block_rows=None`` (the default), ``bm`` shrinks as rows widen so an
+    input block stays within a fixed VMEM budget (oversized single rows
+    are the serving engine's shard cap's problem, not this stager's); a
+    tuned ``block_rows`` pins the batch block directly.  Returns
+    ``(xp (Bp, wr), lane_coord (g,), bm, g)`` with ``lane_coord[j] = j % d``.
     """
     b, l, _ = pts3.shape
-    g = d * LANES // math.gcd(d, LANES)
+    g = lane_group(d)
     wr = round_up(max(l * d, g), g)
-    budget_rows = max(1, (1 << 21) // (wr * max(1, pts3.dtype.itemsize)))
-    bm = pick_block(b, max(SUBLANES, budget_rows // SUBLANES * SUBLANES),
-                    SUBLANES)
+    if block_rows is None:
+        block_rows = packed_budget_rows(wr, pts3.dtype.itemsize)
+    bm = pick_block(b, block_rows, SUBLANES)
     bp = round_up(b, bm)
     flat = pts3.reshape(b, l * d)
     xp = jnp.pad(flat, ((0, bp - b), (0, wr - l * d)))

@@ -9,7 +9,10 @@ against per-request dispatch:
     PYTHONPATH=src python -m repro.launch.serve_transforms --smoke
 
 ``--smoke`` shrinks the workload to a seconds-long liveness run (what CI
-executes so the documented command cannot rot).
+executes so the documented command cannot rot).  ``--autotune`` enables
+the tuning cache (``repro.autotune``): the size grid and kernel launch
+parameters come from the committed winners instead of the hardcoded
+defaults, and the schedule header names the grid's source.
 """
 from __future__ import annotations
 
@@ -17,19 +20,21 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import serving
 from repro.serving import workload
 from repro.serving.workload import timed as _timed
 
 
-def run_workload(requests: int, *, backend: str, waste_cap: float,
+def run_workload(requests: int, *, backend: str,
+                 waste_cap: float | None = None,
                  max_points: int, max_points_per_launch: int | None,
                  seed: int, compare: bool = True) -> dict:
-    """Serve one workload; returns the timing/schedule summary dict."""
-    rng = np.random.default_rng(seed)
-    reqs = workload.random_workload(rng, requests, max_points=max_points)
+    """Serve one workload; returns the timing/schedule summary dict.
+    ``waste_cap=None`` defers to the server's grid resolution (the tuning
+    cache when ``repro.autotune`` is enabled, else the default grid)."""
+    reqs = workload.random_workload(seed=seed, n_requests=requests,
+                                    max_points=max_points)
 
     serving.reset_stats()
     srv = serving.GeometryServer(backend=backend, waste_cap=waste_cap,
@@ -52,11 +57,14 @@ def run_workload(requests: int, *, backend: str, waste_cap: float,
 
     return {"requests": requests, "batched_s": batched_s,
             "per_request_s": per_request_s, "report": srv.last_report,
-            "stats": stats}
+            "stats": stats,
+            "grid": (srv.min_len, srv.waste_cap, srv.grid_source)}
 
 
 def print_summary(res: dict) -> None:
     st = res["stats"]
+    min_len, cap, src = res["grid"]
+    print(f"size grid: min_len={min_len} waste_cap={cap} ({src})")
     print(f"{'bucket':<12} {'plan':<7} {'lpad':>5} {'reqs':>5} "
           f"{'launches':>8} {'waste':>6}")
     for rep in res["report"]:
@@ -78,7 +86,13 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", default=None,
                     choices=[None, "ref", "interpret", "pallas"])
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--waste-cap", type=float, default=0.5)
+    ap.add_argument("--waste-cap", type=float, default=None,
+                    help="explicit padding-waste cap; unset defers to the "
+                         "tuning cache (with --autotune) or the default "
+                         "grid")
+    ap.add_argument("--autotune", action="store_true",
+                    help="consult the tuning cache for the size grid and "
+                         "kernel launch parameters")
     ap.add_argument("--max-points", type=int, default=4096)
     ap.add_argument("--max-points-per-launch", type=int, default=None,
                     help="shard buckets whose packed B*L exceeds this")
@@ -88,6 +102,9 @@ def main(argv=None) -> None:
                     help="tiny workload; CI liveness check")
     args = ap.parse_args(argv)
 
+    if args.autotune:
+        import repro.autotune
+        repro.autotune.set_enabled(True)
     requests = 16 if args.smoke else args.requests
     max_points = 128 if args.smoke else args.max_points
     res = run_workload(requests, backend=args.backend,

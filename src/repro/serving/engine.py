@@ -48,6 +48,7 @@ import typing
 import jax
 import numpy as np
 
+from repro.autotune import cache as tuning
 from repro.core import transform_chain as tc
 from repro.distributed import sharding
 from repro.kernels import (chain_apply_batch, chain_diag_batch, dispatch,
@@ -96,16 +97,26 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
     dim, _ = structure
     diagonal = tc.structure_is_diagonal(structure)
 
+    # Tuning-cache consult at trace time, mirroring the chain compiler:
+    # the packed (B, L) shape is concrete under the jit trace, so the
+    # lookup keys on the bucket's real size class; staging-only knobs keep
+    # every config bit-identical (see core.transform_chain._compile).
     if diagonal:
         def body(folded, pts3):
             stats["traces"] += 1
             s, t = folded
-            return chain_diag_batch(pts3, s, t, backend=backend)
+            cfg = tuning.config_for("chain_diag_batch", backend,
+                                    str(pts3.dtype),
+                                    pts3.shape[0] * pts3.shape[1])
+            return chain_diag_batch(pts3, s, t, backend=backend, config=cfg)
     else:
         def body(folded, pts3):
             stats["traces"] += 1
             a, t = folded
-            return chain_apply_batch(pts3, a, t, backend=backend)
+            cfg = tuning.config_for("chain_apply_batch", backend,
+                                    str(pts3.dtype),
+                                    pts3.shape[0] * pts3.shape[1])
+            return chain_apply_batch(pts3, a, t, backend=backend, config=cfg)
 
     return BatchPlan(kind="diag" if diagonal else "matrix", dim=dim,
                      backend=backend, fn=jax.jit(body))
@@ -179,12 +190,19 @@ class GeometryServer:
     """
 
     def __init__(self, *, backend: str | None = None,
-                 min_len: int = bucketing.MIN_LEN,
-                 waste_cap: float = bucketing.WASTE_CAP,
+                 min_len: int | None = None,
+                 waste_cap: float | None = None,
                  max_points_per_launch: int | None = None):
         self.backend = backend
-        self.min_len = min_len
-        self.waste_cap = waste_cap
+        # size-grid knobs: explicit args win; unset knobs come from the
+        # tuning cache when autotuning is enabled, else the historical
+        # defaults (bucketing.MIN_LEN / WASTE_CAP) -- see bucketing.grid_for.
+        # The explicit args are kept and re-resolved at every flush, so
+        # toggling repro.autotune.set_enabled mid-life moves a server's
+        # grid too (its plan caches are cleared by the same call).
+        self._grid_args = (min_len, waste_cap)
+        self.min_len, self.waste_cap, self.grid_source = bucketing.grid_for(
+            dispatch.resolve(backend), min_len=min_len, waste_cap=waste_cap)
         #: shard cap: a bucket whose packed B*L exceeds this splits into
         #: multiple launches along the batch axis
         self.max_points_per_launch = max_points_per_launch
@@ -269,6 +287,13 @@ class GeometryServer:
         """Execute all pending requests; results in submission order."""
         pending, self._pending = self._pending, []
         backend = dispatch.resolve(self.backend)
+        # grid lookup keyed by this flush's traffic scale (largest request
+        # length): grids are tuned per scale, so the lookup must say which
+        # scale is being served
+        self.min_len, self.waste_cap, self.grid_source = bucketing.grid_for(
+            backend, min_len=self._grid_args[0],
+            waste_cap=self._grid_args[1],
+            n=max((p.n for p in pending), default=0))
         results: dict[int, typing.Any] = {}
         buckets: dict[tuple, list[_Pending]] = {}
         for p in pending:

@@ -63,14 +63,32 @@ def chain_for(rng: np.random.Generator, dim: int, kinds: str) -> TransformChain:
     return chain
 
 
-def random_workload(rng: np.random.Generator, n_requests: int, *,
+def random_workload(rng: np.random.Generator | int | None = None,
+                    n_requests: int | None = None, *, seed: int | None = None,
                     templates=TEMPLATES, max_points: int = 512,
                     min_points: int = 1, sigma: float = 0.7):
     """``n_requests`` (chain, points) pairs: structures cycle through the
     template pool, parameters are random per request, and point counts are
     lognormal around sqrt(min*max) -- serving traffic concentrates around
     a typical request size rather than spreading uniformly, which is what
-    makes size-bucketed packing effective."""
+    makes size-bucketed packing effective.
+
+    Randomness is seedable end-to-end: pass ``seed=`` (or an int / fresh
+    Generator as ``rng``) and every draw -- structure parameters, point
+    counts, point coordinates -- comes from that one stream, so two calls
+    with the same seed and arguments produce bit-identical request mixes.
+    That is what makes tuned-vs-default benchmark comparisons apples to
+    apples (``benchmarks/autotune_bench.py`` relies on it)."""
+    if n_requests is None:
+        raise ValueError("random_workload needs n_requests")
+    if rng is None:
+        if seed is None:
+            raise ValueError("random_workload needs rng= or seed=")
+        rng = seed
+    elif seed is not None:
+        raise ValueError("pass rng= or seed=, not both")
+    if not isinstance(rng, np.random.Generator):
+        rng = np.random.default_rng(rng)
     median = max(1.0, np.sqrt(max(1, min_points) * max_points))
     requests = []
     for i in range(n_requests):
