@@ -1,0 +1,137 @@
+"""Graphics-pipeline benchmark: projective viewing chains, fused vs staged.
+
+``benchmarks/run.py --graphics`` runs this module.  Two claims, as rows:
+
+  * ``graphics_fused_pipeline`` -- a full 3D viewing chain (model affines
+    -> camera -> perspective -> NDC cull -> viewport) executed as ONE
+    fused kernel launch through the chain compiler, against the same
+    chain dispatched one primitive at a time (one launch + one full HBM
+    round-trip per stage).  Launch counts and HBM bytes come from
+    ``repro.kernels.opcount`` -- the byte economy is recorded, not
+    implied.
+  * ``graphics_serving_mixed`` -- a seeded 64-request mixed affine +
+    projective workload (the full ``repro.serving.workload`` template
+    pool, which includes the viewing-pipeline templates) served through
+    ``GeometryServer`` vs per-request dispatch: the launch-count
+    reduction extends to projective plan buckets unchanged.  This row
+    always runs at 64 requests -- smoke mode only trims iterations -- so
+    every recorded BENCH json carries the mixed-workload launch economy.
+
+See benchmarks/PERF.md for the row definitions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import graphics, serving
+from repro.core.transform_chain import TransformChain
+from repro.kernels import opcount
+from repro.serving import workload
+from repro.serving.workload import timed as _timed
+
+#: seed for the mixed affine+projective serving row (fixed so BENCH
+#: records across PRs compare the same request mix)
+MIXED_SEED = 2207
+MIXED_REQUESTS = 64
+
+
+def _pipeline_chain() -> TransformChain:
+    """Model spin/scale + camera + perspective + cull + viewport: 7
+    primitives folding to one projective (H, lo, hi) plan."""
+    model = (TransformChain.identity(3)
+             .rotate(0.5, axis="y").scale(1.4).translate(0.2, -0.1, 0.0))
+    cam = graphics.Camera(eye=(2.5, 1.8, 4.0), target=(0.0, 0.0, 0.0),
+                          fov_y=np.pi / 3, near=0.5, far=40.0)
+    return graphics.viewing_chain(
+        model=model, camera=cam,
+        viewport=graphics.Viewport(0.0, 0.0, 640.0, 480.0))
+
+
+def _singles(chain: TransformChain) -> list[TransformChain]:
+    """The same chain as one-primitive chains -- the staged dispatch
+    baseline (one launch and one full HBM round-trip per stage)."""
+    return [TransformChain(chain.dim, (ka,), (p,))
+            for ka, p in zip(chain.kinds, chain.params)]
+
+
+def _fused_rows(rng, *, n_points: int, iters: int, tag: str) -> list[str]:
+    chain = _pipeline_chain()
+    pts = jnp.asarray(rng.standard_normal((n_points, 3)) * 0.8, jnp.float32)
+    singles = _singles(chain)
+
+    def staged(p):
+        for single in singles:
+            p = single.apply(p, backend="ref")
+        return p
+
+    staged(pts)                                     # warm plans
+    chain.project(pts, backend="ref")
+    with opcount.counting() as seq_rec:
+        staged(pts)
+    with opcount.counting() as fused_rec:
+        out, mask = chain.project(pts, backend="ref")
+    us_seq = min(_timed(lambda: staged(pts)) for _ in range(iters)) * 1e6
+    us_fused = min(_timed(lambda: chain.project(pts, backend="ref"))
+                   for _ in range(iters)) * 1e6
+    inside = int(np.sum(np.asarray(mask)))
+    return [
+        f"graphics_staged_pipeline{tag},{us_seq:.1f},"
+        f"launches={len(seq_rec)};"
+        f"hbm_bytes={opcount.total_bytes(seq_rec)}",
+        f"graphics_fused_pipeline{tag},{us_fused:.1f},"
+        f"launches={len(fused_rec)};"
+        f"hbm_bytes={opcount.total_bytes(fused_rec)};"
+        f"primitives_folded={len(chain)};"
+        f"points_inside={inside};"
+        f"byte_ratio_vs_staged="
+        f"{opcount.total_bytes(seq_rec) / opcount.total_bytes(fused_rec):.2f}x;"
+        f"speedup_vs_staged={us_seq / us_fused:.2f}x",
+    ]
+
+
+def _serving_rows(*, iters: int, tag: str) -> list[str]:
+    reqs = workload.random_workload(seed=MIXED_SEED,
+                                    n_requests=MIXED_REQUESTS,
+                                    max_points=512)
+    n_proj = sum(1 for c, _ in reqs if c.is_projective)
+
+    for chain, pts in reqs:                          # warm per-request plans
+        chain.apply(jnp.asarray(pts), backend="ref")
+    best_single = min(
+        _timed(lambda: [np.asarray(chain.apply(jnp.asarray(pts),
+                                               backend="ref"))
+                        for chain, pts in reqs])
+        for _ in range(iters))
+
+    srv = serving.GeometryServer(backend="ref")
+    srv.serve(reqs)                                  # warm batch plans
+    serving.reset_stats()
+    best_batched = min(_timed(lambda: srv.serve(reqs)) for _ in range(iters))
+    st = serving.stats
+    launches = st["launches"] // iters
+    proj_buckets = sum(1 for r in srv.last_report if r.kind == "projective")
+    print(f"[graphics] {MIXED_REQUESTS} requests ({n_proj} projective): "
+          f"per-request {best_single * 1e3:.1f} ms ({MIXED_REQUESTS} "
+          f"launches) vs batched {best_batched * 1e3:.1f} ms "
+          f"({launches} launches, {proj_buckets} projective buckets) -> "
+          f"{best_single / best_batched:.2f}x")
+    return [
+        f"graphics_serving_mixed{tag},{best_batched * 1e6:.1f},"
+        f"requests={MIXED_REQUESTS};projective_requests={n_proj};"
+        f"launches={launches};"
+        f"launches_saved={MIXED_REQUESTS - launches};"
+        f"projective_buckets={proj_buckets};"
+        f"per_request_us={best_single * 1e6:.1f};"
+        f"speedup_vs_per_request={best_single / best_batched:.2f}x",
+    ]
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    iters = 2 if smoke else 5
+    rng = np.random.default_rng(0)
+    rows = _fused_rows(rng, n_points=1 << 12 if smoke else 1 << 18,
+                       iters=iters, tag=tag)
+    rows += _serving_rows(iters=iters, tag=tag)
+    return rows

@@ -11,9 +11,12 @@ kernel + serving rows, roofline skipped) -- the CI pass; see
 benchmarks/PERF.md.  ``--autotune`` additionally records tuned-vs-default
 rows (``autotune_serving_*``: same seeded workload served under the
 default size grid and under the tuning-cache winner, with launch counts
-and speedup as derived fields).  ``--out`` overrides the JSON path
-(``--out ''`` disables the record, which is what CI does to keep runners
-stateless).
+and speedup as derived fields).  ``--graphics`` records the projective
+viewing-pipeline rows (``graphics_*``: fused vs staged dispatch, and the
+mixed affine+projective 64-request serving economy).  ``--out`` overrides
+the JSON path (``--out ''`` disables the record, which is what CI does to
+keep runners stateless); the default path is collision-proof -- two runs
+in the same second get distinct files, never a silent overwrite.
 """
 from __future__ import annotations
 
@@ -65,6 +68,10 @@ def main(argv=None) -> None:
                     help="record tuned-vs-default serving rows "
                          "(tuning-cache winners vs the deterministic "
                          "default grid, same seeded workload)")
+    ap.add_argument("--graphics", action="store_true",
+                    help="record projective viewing-pipeline rows (fused "
+                         "vs staged dispatch + mixed affine+projective "
+                         "serving)")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -75,8 +82,8 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
-    from benchmarks import (autotune_bench, kernel_bench, paper_tables,
-                            roofline_bench, serving_bench)
+    from benchmarks import (autotune_bench, graphics_bench, kernel_bench,
+                            paper_tables, roofline_bench, serving_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -88,6 +95,9 @@ def main(argv=None) -> None:
     if args.autotune:
         print("\n== autotune (tuned vs default launch parameters) ==")
         rows += autotune_bench.run(smoke=args.smoke)
+    if args.graphics:
+        print("\n== graphics (projective viewing chains, fused + served) ==")
+        rows += graphics_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()
@@ -99,7 +109,14 @@ def main(argv=None) -> None:
     stamp = time.strftime("%Y%m%d_%H%M%S")
     out = args.out
     if out is None:
-        out = os.path.join(root, "benchmarks", f"BENCH_{stamp}.json")
+        # collision-proof default path: second-granularity timestamps let
+        # two same-second runs silently overwrite each other, so suffix
+        # until the name is fresh
+        base = os.path.join(root, "benchmarks", f"BENCH_{stamp}")
+        out, k = f"{base}.json", 1
+        while os.path.exists(out):
+            out = f"{base}_{k}.json"
+            k += 1
     if out:
         with open(out, "w") as f:
             json.dump({"timestamp": stamp, "smoke": args.smoke,

@@ -1,0 +1,80 @@
+"""Projected wireframe cube through the serving engine: the graphics
+companion paper's 3D viewing pipeline, end to end.
+
+Each of the cube's 12 edges is one serving request carrying the SAME
+viewing-chain structure (model spin -> look-at camera -> perspective ->
+NDC frustum cull -> viewport), so the GeometryServer buckets all of them
+into a single fused kernel launch: one HBM pass projects every edge,
+divides by w, culls, and maps to screen coordinates -- the mask rides
+back on each result as ``Projected.mask``.
+
+    PYTHONPATH=src python examples/render_pipeline.py
+"""
+import numpy as np
+
+from repro import graphics, serving
+from repro.core.transform_chain import TransformChain
+
+WIDTH, HEIGHT = 64, 28
+SAMPLES_PER_EDGE = 32
+
+
+def cube_edges() -> list[np.ndarray]:
+    """12 edges of the unit cube centered at the origin, each sampled to
+    an (N, 3) float32 polyline."""
+    c = [-1.0, 1.0]
+    corners = np.array([[x, y, z] for x in c for y in c for z in c],
+                       np.float32)
+    pairs = [(a, b) for a in range(8) for b in range(a + 1, 8)
+             if np.sum(np.abs(corners[a] - corners[b])) == 2.0]
+    ts = np.linspace(0.0, 1.0, SAMPLES_PER_EDGE, dtype=np.float32)[:, None]
+    return [corners[a] * (1 - ts) + corners[b] * ts for a, b in pairs]
+
+
+def frame_chain(angle: float) -> TransformChain:
+    """One frame's viewing chain: 7 primitives, ONE projective plan."""
+    model = (TransformChain.identity(3)
+             .rotate(angle, axis="y").rotate(0.4, axis="x").scale(1.0))
+    cam = graphics.Camera(eye=(0.0, 0.6, 4.5), target=(0.0, 0.0, 0.0),
+                          fov_y=np.pi / 3, aspect=WIDTH / HEIGHT / 2.2,
+                          near=0.5, far=20.0)
+    return graphics.viewing_chain(
+        model=model, camera=cam,
+        viewport=graphics.Viewport(0.0, 0.0, WIDTH, HEIGHT))
+
+
+def rasterize(results) -> str:
+    grid = [[" "] * WIDTH for _ in range(HEIGHT)]
+    for res in results:
+        pts = np.asarray(res)[np.asarray(res.mask)]
+        for x, y, _z in pts:
+            xi, yi = int(x), int(y)
+            if 0 <= xi < WIDTH and 0 <= yi < HEIGHT:
+                grid[HEIGHT - 1 - yi][xi] = "#"
+    return "\n".join("".join(row) for row in grid)
+
+
+def main() -> None:
+    edges = cube_edges()
+    server = serving.GeometryServer(backend="ref")
+    for angle in (0.5, 1.1):
+        serving.reset_stats()
+        chain = frame_chain(angle)
+        results = server.serve([(chain, edge) for edge in edges])
+        st = serving.stats
+        inside = sum(int(np.sum(r.mask)) for r in results)
+        total = sum(len(e) for e in edges)
+        print(f"--- frame angle={angle}: {st['requests']} edge requests -> "
+              f"{st['launches']} fused launch(es) "
+              f"({len(chain)} primitives folded per chain; "
+              f"{inside}/{total} samples inside the frustum) ---")
+        print(rasterize(results))
+    # the second frame reused the compiled projective batch plan: same
+    # structure, fresh parameters -> no recompiles
+    print(f"\nplan cache after both frames: "
+          f"{serving.stats['plan_compiles']} compiles this flush "
+          f"(structure was cached from frame 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,23 @@ def main() -> None:
     print(f"diagonal chain: is_diagonal={diag.is_diagonal}, "
           f"plan={diag.plan_kind}")
 
+    # projective pipeline (graphics companion paper): lift the house into
+    # 3D, view it through camera -> perspective -> cull -> viewport -- the
+    # whole chain folds to one (H, lo, hi) plan, one fused launch with the
+    # perspective divide and frustum-cull mask in-kernel
+    from repro import graphics
+    pts3 = np.concatenate([pts, np.zeros((len(pts), 1), np.float32)], axis=1)
+    cam = graphics.Camera(eye=(4.0, 3.0, 8.0), target=(0.0, 1.0, 0.0),
+                          fov_y=np.pi / 4, near=0.5, far=30.0)
+    view = graphics.viewing_chain(
+        camera=cam, viewport=graphics.Viewport(0.0, 0.0, 24.0, 24.0))
+    projected, mask = view.project(jnp.asarray(pts3))
+    ascii_plot(np.asarray(projected)[np.asarray(mask)][:, :2],
+               "perspective-projected house (camera+divide+cull+viewport) "
+               "-- one projective plan")
+    print(f"projective chain: {len(view)} primitives, plan={view.plan_kind}, "
+          f"{int(np.sum(np.asarray(mask)))}/{len(pts3)} points in frustum")
+
     # the same ops on the emulated M1, fixed point, with cycle counts
     fp = (pts * 100).astype(np.int16)   # Q7-ish fixed point
     fp = np.pad(fp, ((0, (-len(fp)) % 64), (0, 0)))[:64]  # one full RC array

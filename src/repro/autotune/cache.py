@@ -42,13 +42,16 @@ DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   "default_cache.json")
 
 #: kernels the tuner knows how to search, and what each tunes:
-#:   chain_diag / chain_apply           -- block rows + lane-packing width
-#:   chain_diag_batch / chain_apply_batch -- batch-axis block rows
+#:   chain_diag / chain_apply / chain_project -- block rows + lane width
+#:   chain_diag_batch / chain_apply_batch / chain_project_batch
+#:                                      -- batch-axis block rows
 #:   matmul                             -- (bm, bn, bk) MXU tile
 #:   rmsnorm                            -- block rows
 #:   serving_grid                       -- size-bucket grid floor + waste cap
-TUNABLE_KERNELS = ("chain_diag", "chain_apply", "chain_diag_batch",
-                   "chain_apply_batch", "matmul", "rmsnorm", "serving_grid")
+TUNABLE_KERNELS = ("chain_diag", "chain_apply", "chain_project",
+                   "chain_diag_batch", "chain_apply_batch",
+                   "chain_project_batch", "matmul", "rmsnorm",
+                   "serving_grid")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,10 +92,13 @@ DEFAULTS: dict[str, KernelConfig] = {
     "chain_diag": KernelConfig("chain_diag", block_rows=256, lane_target=512),
     "chain_apply": KernelConfig("chain_apply", block_rows=256,
                                 lane_target=512),
+    "chain_project": KernelConfig("chain_project", block_rows=256,
+                                  lane_target=512),
     # batch kernels: block_rows=None keeps the VMEM-budget heuristic in
     # kernels.util.stage_packed
     "chain_diag_batch": KernelConfig("chain_diag_batch"),
     "chain_apply_batch": KernelConfig("chain_apply_batch"),
+    "chain_project_batch": KernelConfig("chain_project_batch"),
     "matmul": KernelConfig("matmul", bm=128, bn=128, bk=512),
     "rmsnorm": KernelConfig("rmsnorm", block_rows=256),
     "serving_grid": KernelConfig("serving_grid", grid_min_len=8,

@@ -80,30 +80,55 @@ def _cdiv(a: int, b: int) -> int:
 
 # -- chain kernels (the paper's one-pass composite) ---------------------------
 
+#: plan kind -> (single-chain kernel, batched kernel)
+_CHAIN_KERNELS = {"diag": ("chain_diag", "chain_diag_batch"),
+                  "matrix": ("chain_apply", "chain_apply_batch"),
+                  "projective": ("chain_project", "chain_project_batch")}
+
+
 def chain_param_bytes(d: int, kind: str, itemsize: int = 4) -> int:
     """Composed-parameter bytes of one folded chain: (d,d)+(d,) words for a
-    matrix plan, (d,)+(d,) for a diagonal plan -- the same accounting
-    ``TransformChain.apply`` records through ``opcount``."""
-    words = d * d + d if kind == "matrix" else 2 * d
-    return words * itemsize
+    matrix plan, (d,)+(d,) for a diagonal plan, (d+1)^2 + 2d (homogeneous
+    H plus cull bounds) for a projective plan -- delegating to the ONE
+    table in ``opcount`` that ``TransformChain.apply`` and the serving
+    engine also record from."""
+    from repro.kernels import opcount          # late: keep imports one-way
+    return opcount.chain_param_words(d, kind) * itemsize
+
+
+def _chain_flops_per_point(d: int, kind: str) -> int:
+    """VPU work per point: one MAC for diag lanes, 2d-1 rolled MACs for
+    matrix lanes, and for projective lanes a second MAC set (the
+    homogeneous w), the divide, and the cull compares."""
+    if kind == "diag":
+        return 2 * d
+    if kind == "matrix":
+        return 2 * (2 * d - 1) * d
+    return (4 * (2 * d - 1) + 4) * d
+
+
+def _chain_passes(kind: str) -> int:
+    from repro.kernels import opcount          # late: keep imports one-way
+    return opcount.chain_passes(kind)
 
 
 def chain_cost(n_points: int, d: int, kind: str,
                config: KernelConfig | None = None, *,
                itemsize: int = 4) -> CostEstimate:
     """One fused single-chain launch over (N, d) points: the point buffer
-    moves once in, once out, plus the O(1) composed parameters."""
+    moves once in, once out (plus the mask pass for projective plans),
+    plus the O(1) composed parameters."""
     from repro.kernels import util             # late: keep imports one-way
-    kernel = "chain_diag" if kind == "diag" else "chain_apply"
+    kernel = _CHAIN_KERNELS[kind][0]
     cfg = _cfg(kernel, config)
-    payload = 2 * n_points * d * itemsize
+    payload = _chain_passes(kind) * n_points * d * itemsize
     nbytes = payload + chain_param_bytes(d, kind, itemsize)
     # lane layout: w lanes per row, block_rows rows per grid step -- the
     # same staging math the kernels run (kernels.util is the one source)
     w = util.chain_width(d, target=cfg.lane_target or 512)
     rows = _cdiv(n_points * d, w)
     steps = _cdiv(rows, cfg.block_rows or 256)
-    flops = n_points * d * (2 if kind == "diag" else 2 * (2 * d - 1))
+    flops = n_points * _chain_flops_per_point(d, kind)
     block_bytes = 2 * (cfg.block_rows or 256) * w * itemsize
     return CostEstimate(kernel, nbytes, flops, launches=1, grid_steps=steps,
                         feasible=block_bytes <= VMEM_BYTES)
@@ -115,7 +140,7 @@ def packed_chain_cost(bsz: int, lpad: int, d: int, kind: str,
     """One packed-bucket launch (B requests padded to L points): the same
     byte count ``opcount.packed_chain_bytes`` records per serving launch."""
     from repro.kernels import opcount, util  # late: keep imports one-way
-    kernel = "chain_diag_batch" if kind == "diag" else "chain_apply_batch"
+    kernel = _CHAIN_KERNELS[kind][1]
     cfg = _cfg(kernel, config)
     nbytes = opcount.packed_chain_bytes(bsz, lpad, d, itemsize=itemsize,
                                         kind=kind)
@@ -123,7 +148,7 @@ def packed_chain_cost(bsz: int, lpad: int, d: int, kind: str,
     wr = max(1, _cdiv(lpad * d, g)) * g
     bm = cfg.block_rows or util.packed_budget_rows(wr, itemsize)
     steps = _cdiv(bsz, max(1, bm))
-    flops = bsz * lpad * d * (2 if kind == "diag" else 2 * (2 * d - 1))
+    flops = bsz * lpad * _chain_flops_per_point(d, kind)
     block_bytes = 2 * max(1, bm) * wr * itemsize
     return CostEstimate(kernel, nbytes, flops, launches=1, grid_steps=steps,
                         feasible=block_bytes <= VMEM_BYTES)
@@ -188,8 +213,7 @@ def grid_cost(requests: typing.Sequence[tuple[typing.Hashable, str, int, int]],
         kind, d, _ = reqs[0]
         nbytes += opcount.packed_chain_bytes(len(reqs), lpad, d,
                                              itemsize=itemsize, kind=kind)
-        flops += len(reqs) * lpad * d * (2 if kind == "diag"
-                                         else 2 * (2 * d - 1))
+        flops += len(reqs) * lpad * _chain_flops_per_point(d, kind)
     return CostEstimate("serving_grid", nbytes, flops,
                         launches=len(buckets), grid_steps=len(buckets))
 

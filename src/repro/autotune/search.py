@@ -71,9 +71,10 @@ def grid_candidates() -> list[KernelConfig]:
 
 
 def candidates_for(kernel: str) -> list[KernelConfig]:
-    if kernel in ("chain_diag", "chain_apply"):
+    if kernel in ("chain_diag", "chain_apply", "chain_project"):
         return chain_candidates(kernel)
-    if kernel in ("chain_diag_batch", "chain_apply_batch"):
+    if kernel in ("chain_diag_batch", "chain_apply_batch",
+                  "chain_project_batch"):
         return chain_batch_candidates(kernel)
     if kernel == "matmul":
         return matmul_candidates()
@@ -175,9 +176,11 @@ def tune_chain(kernel: str, backend: str, *, n_points: int, d: int = 2,
                dtype: str = "float32", cache: TuningCache | None = None,
                measure: typing.Callable[[KernelConfig], float] | None = None,
                keep: int = 4, iters: int = 3) -> TuneReport:
-    """Tune a single-chain kernel (``chain_diag`` / ``chain_apply``) at one
-    (points, dim) shape through the public op entry."""
-    kind = "diag" if kernel == "chain_diag" else "matrix"
+    """Tune a single-chain kernel (``chain_diag`` / ``chain_apply`` /
+    ``chain_project``) at one (points, dim) shape through the public op
+    entry."""
+    kind = {"chain_diag": "diag", "chain_apply": "matrix",
+            "chain_project": "projective"}[kernel]
     candidates = [] if _ref_ignores_launch_knobs(kernel, backend, measure) \
         else candidates_for(kernel)
     if measure is None:
@@ -191,11 +194,18 @@ def tune_chain(kernel: str, backend: str, *, n_points: int, d: int = 2,
             t = jnp.asarray(rng.uniform(-1, 1, d), jnp.float32)
             entry = lambda cfg: kernels.chain_diag(
                 pts, s, t, backend=backend, config=cfg)
-        else:
+        elif kind == "matrix":
             a = jnp.asarray(rng.standard_normal((d, d)), jnp.float32)
             t = jnp.asarray(rng.uniform(-1, 1, d), jnp.float32)
             entry = lambda cfg: kernels.chain_apply(
                 pts, a, t, backend=backend, config=cfg)
+        else:
+            from repro.serving import workload
+            # time on the SAME matrix distribution the served traffic
+            # draws (workload.random_projective is the one recipe)
+            hj = jnp.asarray(workload.random_projective(rng, d))
+            entry = lambda cfg: kernels.chain_project(
+                pts, hj, -4.0, 4.0, backend=backend, config=cfg)
         measure = lambda cfg: _time_best(lambda: entry(cfg), iters)
     cost = lambda cfg: costmodel.chain_cost(n_points, d, kind, cfg)
     return _run_trials(kernel, backend, dtype, n_points, candidates, cost,
@@ -316,17 +326,19 @@ def smoke_search(backend: str = "ref", *,
                  cache: TuningCache | None = None,
                  measure: typing.Callable[[KernelConfig], float] | None = None,
                  iters: int = 3) -> tuple[TuningCache, list[TuneReport]]:
-    """The pruned search CI runs: two small chain shapes (one diagonal 3D,
-    one general 2D) plus the serving grid on BOTH seeded workloads (the
-    tiny smoke mix and the benchmark-scale 64-request mix -- each caches
-    at its own size class).  Returns the populated cache and the
-    per-kernel reports."""
+    """The pruned search CI runs: three small chain shapes (diagonal 3D,
+    general 2D, projective 3D) plus the serving grid on BOTH seeded
+    workloads (the tiny smoke mix and the benchmark-scale 64-request mix
+    -- each caches at its own size class).  Returns the populated cache
+    and the per-kernel reports."""
     cache = cache if cache is not None else TuningCache()
     reports = [
         tune_chain("chain_diag", backend, n_points=2048, d=3, cache=cache,
                    measure=measure, iters=iters),
         tune_chain("chain_apply", backend, n_points=2048, d=2, cache=cache,
                    measure=measure, iters=iters),
+        tune_chain("chain_project", backend, n_points=2048, d=3,
+                   cache=cache, measure=measure, iters=iters),
         tune_serving_grid(smoke_workload(), backend, cache=cache,
                           measure=measure, iters=max(1, iters - 1)),
         tune_serving_grid(bench_workload(), backend, cache=cache,

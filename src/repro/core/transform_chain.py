@@ -12,15 +12,28 @@ array.  ``TransformChain`` is that idea as a small compiler:
      anything containing a rotation or a custom matrix folds into a single
      composed (A, t) pair.  Chains whose structure is pure-diagonal
      (translate/scale/affine only) never build a matrix and never touch the
-     MXU.  The fold itself is O(k d^2) scalar work and runs host-side in
-     numpy -- one shared code path for single-request ``apply`` and the
-     serving engine, so a request folds to bit-identical composed
-     parameters however it is dispatched (see the folding section note).
+     MXU.  Chains containing a *projective* primitive (``projective``/
+     ``cull`` -- the graphics companion paper's viewing pipelines) fold one
+     level up, in homogeneous space: everything between perspective divides
+     collapses into a single (d+1, d+1) matrix H plus axis-aligned cull
+     bounds, because affines compose into H on either side of a divide
+     (the divide is a projective equivalence) -- so a full model -> camera
+     -> projection -> cull -> viewport chain is ONE (H, lo, hi) triple and
+     ONE divide.  The fold itself is O(k d^2) scalar work and runs
+     host-side in numpy -- one shared code path for single-request
+     ``apply`` and the serving engine, so a request folds to bit-identical
+     composed parameters however it is dispatched (see the folding section
+     note).
   3. **Lower** -- the folded chain lowers to ONE fused lane-dense Pallas
      kernel over the flattened point buffer -- one HBM read of the points,
      one write, with the composed parameters staged as (1, w) context-word
      rows: ``kernels.chain_diag`` for diagonal plans, ``kernels.chain_apply``
-     (2d-1 lane-rolled multiply-adds) for general plans.
+     (2d-1 lane-rolled multiply-adds) for general plans, and
+     ``kernels.chain_project`` (a second rolled MAC set for the homogeneous
+     w + in-kernel divide + cull mask) for projective plans.  The plan
+     kinds form a lattice -- diag (s, t) is the diagonal of matrix (A, t),
+     which is the affine block of projective (H, lo, hi) -- and every
+     structure lowers to the cheapest kind that can express it.
   4. **Plan cache** -- compiled plans are cached by *chain structure* +
      backend, and the jitted plan function takes the folded parameter
      values as arguments, so the serving hot path (same chain shape, fresh
@@ -48,9 +61,12 @@ from repro.autotune import cache as tuning
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import chain_diag as _k_chain_diag
 from repro.kernels.matmul import chain_apply as _k_chain_apply
+from repro.kernels.projective import chain_project as _k_chain_project
 
-# primitive kinds: T translate, S scale, R rotate, A affine(s, t), M matrix
+# primitive kinds: T translate, S scale, R rotate, A affine(s, t), M matrix,
+# P projective (full homogeneous matrix), C cull (axis-aligned bounds)
 _DIAG_KINDS = frozenset("TSA")
+_PROJ_KINDS = frozenset("PC")
 _AXES = {"x": 0, "y": 1, "z": 2}
 
 #: plan-cache / trace statistics (observable by tests and benchmarks):
@@ -109,9 +125,22 @@ def _rot(dim: int, axis: int, theta) -> np.ndarray:
 
 def _mat_parts(val, dim: int) -> tuple[np.ndarray, np.ndarray]:
     """Split a custom-matrix param into (A (d,d), t (d,)); accepts a (d, d)
-    linear matrix or a (d+1, d+1) homogeneous one (row-vector convention)."""
+    linear matrix or a (d+1, d+1) AFFINE homogeneous one (row-vector
+    convention).  A homogeneous matrix with a nontrivial perspective
+    column is rejected -- silently dropping that column would compute the
+    wrong transform; such matrices belong in ``projective``."""
     m = np.asarray(val, np.float32)
     if m.shape == (dim + 1, dim + 1):
+        # tolerance scaled to the matrix magnitude: computed affines may
+        # carry round-off residue in the perspective column, which is
+        # numerically irrelevant; a REAL perspective column is orders of
+        # magnitude above it
+        tol = 1e-6 * max(1.0, float(np.abs(m).max()))
+        if np.any(np.abs(m[:dim, dim]) > tol) or abs(m[dim, dim] - 1.0) > tol:
+            raise ValueError(
+                "matrix() requires an affine homogeneous matrix (last "
+                f"column [0, ..., 0, 1]); got last column {m[:, dim]} -- "
+                "use projective() for perspective matrices")
         return m[:dim, :dim], m[dim, :dim]
     if m.shape == (dim, dim):
         return m, np.zeros((dim,), np.float32)
@@ -155,6 +184,87 @@ def _fold_matrix(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
             m, u = _mat_parts(val, dim)
             a, t = a @ m, t @ m + u
     return a, t
+
+
+def _homo(dim: int, a: np.ndarray, t: np.ndarray) -> np.ndarray:
+    """Embed an affine (A, t) as a (d+1, d+1) homogeneous row-vector
+    matrix: [p, 1] @ H = [p @ A + t, 1]."""
+    h = np.zeros((dim + 1, dim + 1), np.float32)
+    h[:dim, :dim] = a
+    h[dim, :dim] = t
+    h[dim, dim] = 1.0
+    return h
+
+
+def _map_bounds(lo: np.ndarray, hi: np.ndarray, s: np.ndarray,
+                t: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Push axis-aligned [lo, hi] bounds through a per-coordinate affine
+    y = s*x + t (negative scales swap the endpoints).  Only called once a
+    cull has been recorded, so the bounds are finite."""
+    a, b = s * lo + t, s * hi + t
+    return np.minimum(a, b), np.maximum(a, b)
+
+
+def _fold_projective(dim: int, kinds, params):
+    """Fold a projective chain to (H (d+1, d+1), lo (d,), hi (d,)) with
+    q = divide([p, 1] @ H) and an inclusive axis-aligned cull against
+    [lo, hi] in the OUTPUT space (+-inf where no cull was recorded).
+
+    The homogeneous composition collapses everything around the divide:
+    a divide is a projective equivalence ([q/w, 1] ~ [q, w]), so affines
+    and projectives on either side all fold into one H with one divide at
+    the end.  Cull bounds are recorded in the coordinate space where the
+    ``cull`` primitive sits and pushed forward through later diagonal
+    primitives (a viewport map); a rotation, custom matrix, or projective
+    AFTER a cull would need non-axis-aligned bounds and is rejected.
+    """
+    h = np.eye(dim + 1, dtype=np.float32)
+    lo = np.full((dim,), -np.inf, np.float32)
+    hi = np.full((dim,), np.inf, np.float32)
+    culled = False
+    for (kind, axis), val in zip(kinds, params):
+        if kind == "C":
+            lo = np.maximum(lo, _vec(val[0], dim))
+            hi = np.minimum(hi, _vec(val[1], dim))
+            culled = True
+            continue
+        if kind == "T":
+            t = _vec(val, dim)
+            hk = _homo(dim, np.eye(dim, dtype=np.float32), t)
+            if culled:
+                lo, hi = lo + t, hi + t
+        elif kind == "S":
+            s = _vec(val, dim)
+            hk = _homo(dim, np.diag(s), np.zeros((dim,), np.float32))
+            if culled:
+                lo, hi = _map_bounds(lo, hi, s, np.float32(0.0))
+        elif kind == "A":
+            s, t = _vec(val[0], dim), _vec(val[1], dim)
+            hk = _homo(dim, np.diag(s), t)
+            if culled:
+                lo, hi = _map_bounds(lo, hi, s, t)
+        elif kind in ("R", "M"):
+            if culled:
+                raise ValueError(
+                    "only translate/scale/affine may follow cull() in a "
+                    f"projective chain (got {kind!r}): axis-aligned cull "
+                    "bounds cannot fold through a rotation or custom matrix")
+            if kind == "R":
+                hk = _homo(dim, _rot(dim, axis, val),
+                           np.zeros((dim,), np.float32))
+            else:
+                hk = _homo(dim, *_mat_parts(val, dim))
+        else:                                   # "P"
+            if culled:
+                raise ValueError("a projective primitive cannot follow "
+                                 "cull(): record the cull after the last "
+                                 "projection instead")
+            hk = np.asarray(val, np.float32)
+            if hk.shape != (dim + 1, dim + 1):
+                raise ValueError(f"projective matrix must be "
+                                 f"({dim + 1},{dim + 1}); got {hk.shape}")
+        h = (h @ hk).astype(np.float32)
+    return h, lo, hi
 
 
 # -- traced-parameter fallback (jnp fold) ------------------------------------
@@ -220,13 +330,31 @@ def structure_is_diagonal(structure: tuple) -> bool:
     return all(k in _DIAG_KINDS for k, _ in kinds)
 
 
-def fold_structure(structure: tuple, params) -> tuple[np.ndarray, np.ndarray]:
+def structure_is_projective(structure: tuple) -> bool:
+    """True if ``structure`` folds to a projective (H, lo, hi) plan --
+    it contains a projective matrix or a cull primitive."""
+    _, kinds = structure
+    return any(k in _PROJ_KINDS for k, _ in kinds)
+
+
+def plan_kind_of(structure: tuple) -> str:
+    """The plan-kind lattice resolution for a structure: the cheapest of
+    diag < matrix < projective that can express it."""
+    if structure_is_projective(structure):
+        return "projective"
+    return "diag" if structure_is_diagonal(structure) else "matrix"
+
+
+def fold_structure(structure: tuple, params) -> tuple[np.ndarray, ...]:
     """Fold ONE parameter set for ``structure``: float32 (s, t) if the
-    structure is diagonal, else (A, t).  This host fold is shared verbatim
+    structure is diagonal, (A, t) if it is a general affine, and
+    (H, lo, hi) if it is projective.  This host fold is shared verbatim
     by ``TransformChain.apply`` and the serving engine's bucket packing, so
     a request's composed parameters are bit-identical however it is
     dispatched."""
     dim, kinds = structure
+    if structure_is_projective(structure):
+        return _fold_projective(dim, kinds, params)
     if structure_is_diagonal(structure):
         return _fold_diag(dim, kinds, params)
     return _fold_matrix(dim, kinds, params)
@@ -237,8 +365,9 @@ def fold_structure(structure: tuple, params) -> tuple[np.ndarray, np.ndarray]:
 @dataclasses.dataclass(frozen=True)
 class Plan:
     """A compiled chain: ``fn(folded, flat_points_2d) -> out`` (jitted),
-    where ``folded`` is the host-folded (s, t) or (A, t) pair."""
-    kind: str                      # "diag" | "matrix"
+    where ``folded`` is the host-folded (s, t) / (A, t) / (H, lo, hi)
+    tuple.  Projective plans return ``(projected, mask)``."""
+    kind: str                      # "diag" | "matrix" | "projective"
     dim: int
     backend: str
     length: int                    # primitives folded into this plan
@@ -247,7 +376,7 @@ class Plan:
 
 def _compile(structure: tuple, backend: str) -> Plan:
     dim, kinds = structure
-    diagonal = structure_is_diagonal(structure)
+    kind = plan_kind_of(structure)
 
     # The tuning-cache consult happens inside the plan body, i.e. at
     # TRACE time: point shapes are concrete there, so the lookup keys on
@@ -257,23 +386,31 @@ def _compile(structure: tuple, backend: str) -> Plan:
     # tuning disabled this returns the deterministic defaults; any config
     # is bit-identical (staging-only knobs), so tuned and untuned plans
     # agree bitwise.
-    if diagonal:
+    if kind == "diag":
         def body(folded, pts2):
             stats["traces"] += 1
             s, t = folded
             cfg = tuning.config_for("chain_diag", backend,
                                     str(pts2.dtype), pts2.shape[0])
             return _k_chain_diag(pts2, s, t, backend=backend, config=cfg)
-    else:
+    elif kind == "matrix":
         def body(folded, pts2):
             stats["traces"] += 1
             a, t = folded
             cfg = tuning.config_for("chain_apply", backend,
                                     str(pts2.dtype), pts2.shape[0])
             return _k_chain_apply(pts2, a, t, backend=backend, config=cfg)
+    else:
+        def body(folded, pts2):
+            stats["traces"] += 1
+            h, lo, hi = folded
+            cfg = tuning.config_for("chain_project", backend,
+                                    str(pts2.dtype), pts2.shape[0])
+            return _k_chain_project(pts2, h, lo, hi, backend=backend,
+                                    config=cfg)
 
-    return Plan(kind="diag" if diagonal else "matrix", dim=dim,
-                backend=backend, length=len(kinds), fn=jax.jit(body))
+    return Plan(kind=kind, dim=dim, backend=backend, length=len(kinds),
+                fn=jax.jit(body))
 
 
 def _get_plan(structure: tuple, backend: str) -> Plan:
@@ -349,8 +486,28 @@ class TransformChain:
 
     def matrix(self, m) -> "TransformChain":
         """Append a custom (d, d) linear or (d+1, d+1) homogeneous matrix
-        (row-vector convention: q = [p, 1] @ M)."""
+        (row-vector convention: q = [p, 1] @ M).  The matrix must be
+        affine (last column [0, ..., 0, 1]); use ``projective`` for a
+        matrix with a nontrivial perspective column."""
         return self._push("M", -1, m)
+
+    def projective(self, m) -> "TransformChain":
+        """Append a full (d+1, d+1) projective matrix (row-vector
+        convention) -- a perspective or orthographic projection.  The
+        chain becomes *projective*: it folds in homogeneous space and its
+        plan ends in ONE in-kernel perspective divide (consecutive
+        projective/affine primitives keep collapsing into a single H --
+        the divide is a projective equivalence)."""
+        return self._push("P", -1, m)
+
+    def cull(self, lo=-1.0, hi=1.0) -> "TransformChain":
+        """Append an inclusive axis-aligned cull against [lo, hi]^d in the
+        CURRENT coordinate space (the NDC frustum cull of a viewing
+        pipeline; scalars broadcast, or pass per-dim vectors).  The chain
+        becomes projective; its plan emits a per-point inside/outside mask
+        (see ``project``).  Only translate/scale/affine (e.g. a viewport
+        map) may follow a cull -- the bounds fold through those exactly."""
+        return self._push("C", -1, (lo, hi))
 
     # -- introspection -------------------------------------------------------
 
@@ -369,20 +526,34 @@ class TransformChain:
         return all(k in _DIAG_KINDS for k, _ in self.kinds)
 
     @property
-    def plan_kind(self) -> str:
-        """The plan class this structure lowers to: "diag" (VPU-only
-        fused affine) or "matrix" (lane-rolled q = p @ A + t)."""
-        return "diag" if self.is_diagonal else "matrix"
+    def is_projective(self) -> bool:
+        """True if the chain contains a projective/cull primitive: it
+        folds in homogeneous space and its plan ends in a divide."""
+        return any(k in _PROJ_KINDS for k, _ in self.kinds)
 
-    def fold(self) -> tuple[np.ndarray, np.ndarray]:
+    @property
+    def plan_kind(self) -> str:
+        """The plan class this structure lowers to -- the cheapest rung of
+        the diag < matrix < projective lattice that can express it:
+        "diag" (VPU-only fused affine), "matrix" (lane-rolled
+        q = p @ A + t), or "projective" (homogeneous MACs + divide +
+        cull mask)."""
+        return plan_kind_of(self.structure)
+
+    def fold(self) -> tuple[np.ndarray, ...]:
         """The host fold this chain's plan consumes: float32 (s, t) for
-        diagonal structures, (A, t) otherwise.  Bit-identical wherever it is
-        computed -- ``apply``, the serving engine, a test -- because it is
-        one shared numpy code path (see the folding section note)."""
+        diagonal structures, (A, t) for general affine ones, (H, lo, hi)
+        for projective ones.  Bit-identical wherever it is computed --
+        ``apply``, the serving engine, a test -- because it is one shared
+        numpy code path (see the folding section note)."""
         return fold_structure(self.structure, self.params)
 
     def folded(self) -> tuple[jnp.ndarray, jnp.ndarray]:
-        """Eagerly fold to the composed (A (d,d), t (d,)) pair."""
+        """Eagerly fold to the composed (A (d,d), t (d,)) pair.  Projective
+        chains have no affine form -- use ``fold``/``as_homogeneous``."""
+        if self.is_projective:
+            raise ValueError("projective chains have no (A, t) form; use "
+                             "fold() or as_homogeneous()")
         if _params_traced(self.params):
             return _fold_jnp(self.dim, self.kinds, self.params)
         if self.is_diagonal:
@@ -392,7 +563,12 @@ class TransformChain:
         return jnp.asarray(a), jnp.asarray(t)
 
     def as_homogeneous(self) -> jnp.ndarray:
-        """The composed (d+1, d+1) homogeneous matrix (row-vector form)."""
+        """The composed (d+1, d+1) homogeneous matrix (row-vector form).
+        For projective chains this is the folded H (the cull bounds are
+        not representable in the matrix; see ``fold``)."""
+        if self.is_projective:
+            h, _, _ = self.fold()
+            return jnp.asarray(h)
         a, t = self.folded()
         d = self.dim
         h = jnp.zeros((d + 1, d + 1), jnp.float32)
@@ -404,13 +580,24 @@ class TransformChain:
     def _plan(self, backend: str | None) -> Plan:
         return _get_plan(self.structure, dispatch.resolve(backend))
 
+    def _record_fused(self, plan: Plan, flat: jnp.ndarray, d: int) -> None:
+        # one shared table (opcount) for parameter words and HBM passes
+        # per plan kind -- the same accounting costmodel.chain_cost
+        # predicts and the serving engine records per packed launch
+        opcount.record(
+            f"chain_fused_{plan.kind}",
+            opcount.chain_passes(plan.kind) * flat.nbytes
+            + 4 * opcount.chain_param_words(d, plan.kind))
+
     def apply(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
         """Apply the folded chain to (..., d) points in one fused pass.
 
         Concrete parameters go through the cached plan (host fold, see the
         folding section note); parameters that are jax tracers fold in jnp
         inside the caller's trace instead, so grad/jit over chain
-        parameters (pose optimisation) stays differentiable."""
+        parameters (pose optimisation) stays differentiable (affine chains
+        only).  Projective chains return the projected points; use
+        ``project`` to also get the frustum-cull mask."""
         d = points.shape[-1]
         if d != self.dim:
             raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
@@ -418,6 +605,10 @@ class TransformChain:
             return points
         flat = points.reshape(-1, d)
         if _params_traced(self.params):
+            if self.is_projective:
+                raise NotImplementedError(
+                    "projective chains require concrete parameters (the "
+                    "homogeneous fold runs host-side)")
             # chain parameters are jax tracers (grad/jit over a pose):
             # fold in jnp inside the caller's trace, differentiably
             opcount.record("chain_fused_traced",
@@ -426,13 +617,35 @@ class TransformChain:
             out = _k_chain_apply(flat, a, t, backend=backend)
             return out.reshape(points.shape)
         plan = self._plan(backend)
-        # composed-parameter words: (A, t) for matrix plans, (s, t) for
-        # diagonal -- the same accounting costmodel.chain_cost predicts
-        param_bytes = 4 * (d * d + d if plan.kind == "matrix" else 2 * d)
-        opcount.record(f"chain_fused_{plan.kind}",
-                       2 * flat.nbytes + param_bytes)
+        self._record_fused(plan, flat, d)
         out = plan.fn(self.fold(), flat)
+        if plan.kind == "projective":
+            out = out[0]
         return out.reshape(points.shape)
+
+    def project(self, points: jnp.ndarray, *, backend: str | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Apply the chain and return ``(projected (..., d), inside (...,)
+        bool)`` -- the perspective-divided points plus the frustum-cull
+        mask, still ONE fused kernel launch (the divide, the cull test,
+        and the per-point mask reduction all happen in-kernel).  Affine
+        chains project trivially: same result as ``apply``, mask all
+        True."""
+        d = points.shape[-1]
+        if d != self.dim:
+            raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
+        if not self.is_projective:
+            return (self.apply(points, backend=backend),
+                    jnp.ones(points.shape[:-1], bool))
+        if _params_traced(self.params):
+            raise NotImplementedError(
+                "projective chains require concrete parameters (the "
+                "homogeneous fold runs host-side)")
+        flat = points.reshape(-1, d)
+        plan = self._plan(backend)
+        self._record_fused(plan, flat, d)
+        out, mask = plan.fn(self.fold(), flat)
+        return out.reshape(points.shape), mask.reshape(points.shape[:-1])
 
     def apply_many(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
         """Map one compiled plan over a leading batch axis: (B, ..., d) in,

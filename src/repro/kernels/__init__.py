@@ -11,10 +11,14 @@ Composite-chain lowering targets (the paper's one-pass "General Composite
 Algorithm"): ``chain_diag`` (folded diagonal chains, VPU-only) and
 ``chain_apply`` (folded general chains, lane-rolled q = p @ A + t); both
 are single-HBM-pass kernels over the flattened point buffer and are what
-``repro.core.transform_chain`` compiles to.  Their batched forms
-``chain_diag_batch`` / ``chain_apply_batch`` take a packed (B, L, d)
-request batch with per-request folded parameters and are what
-``repro.serving`` lowers a whole plan bucket to -- one launch per bucket.
+``repro.core.transform_chain`` compiles to.  ``chain_project`` extends
+the family to *projective* plans (homogeneous viewing chains with an
+in-kernel perspective divide + frustum-cull mask -- the graphics
+companion paper's 2D/3D pipelines).  The batched forms
+``chain_diag_batch`` / ``chain_apply_batch`` / ``chain_project_batch``
+take a packed (B, L, d) request batch with per-request folded parameters
+and are what ``repro.serving`` lowers a whole plan bucket to -- one
+launch per bucket.
 
 Every family ships ``ops.py`` (public entry, backend-dispatched) and
 ``ref.py`` (pure-jnp oracle).  See ``repro.kernels.dispatch``; HBM byte
@@ -25,6 +29,7 @@ from repro.kernels.affine import (affine, chain_diag, chain_diag_batch, scale,
                                   translate, vecadd)
 from repro.kernels.flash_attention import attention, blockwise_attention
 from repro.kernels.matmul import chain_apply, chain_apply_batch, matmul, rotate2d
+from repro.kernels.projective import chain_project, chain_project_batch
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.rope import rope, rope_tables
 from repro.kernels.ssd import ssd_intra
@@ -32,6 +37,7 @@ from repro.kernels.ssd import ssd_intra
 __all__ = [
     "dispatch", "opcount", "affine", "chain_diag", "chain_diag_batch",
     "scale", "translate", "vecadd", "attention", "blockwise_attention",
-    "chain_apply", "chain_apply_batch", "matmul", "rotate2d", "rmsnorm",
+    "chain_apply", "chain_apply_batch", "chain_project",
+    "chain_project_batch", "matmul", "rotate2d", "rmsnorm",
     "rope", "rope_tables", "ssd_intra",
 ]

@@ -42,6 +42,22 @@ def total_bytes(records: list[tuple[str, int]]) -> int:
     return sum(b for _, b in records)
 
 
+def chain_param_words(d: int, kind: str) -> int:
+    """Composed-parameter words of one folded chain, by plan kind: (s, t)
+    for diag, (A, t) for matrix, (H, lo, hi) for projective.  The ONE
+    table -- ``TransformChain``'s byte records, the serving engine's
+    packed accounting, and the autotune cost model all read it here, so
+    the three cannot drift."""
+    return {"diag": 2 * d, "matrix": d * d + d,
+            "projective": (d + 1) ** 2 + 2 * d}[kind]
+
+
+def chain_passes(kind: str) -> int:
+    """HBM passes of one fused chain launch: read + write, plus the
+    point-buffer-width cull-mask write for projective plans."""
+    return 3 if kind == "projective" else 2
+
+
 def packed_chain_bytes(bsz: int, lpad: int, d: int, *, itemsize: int = 4,
                        kind: str = "matrix") -> int:
     """HBM bytes moved by one packed-batch chain launch (memory-bound model).
@@ -49,12 +65,15 @@ def packed_chain_bytes(bsz: int, lpad: int, d: int, *, itemsize: int = 4,
     A bucket of ``bsz`` requests packed to ``lpad`` points each moves the
     padded point buffer once in and once out (2*B*L*d*itemsize) plus the
     per-request folded parameters -- (d, d) + (d,) words for a ``matrix``
-    plan, (d,) + (d,) for a ``diag`` plan.  Per-request dispatch of the
-    same bucket moves 2*sum(n_i)*d*itemsize payload bytes but pays one
-    launch per request; the packed launch trades (lpad - n_i) rows of
-    padding per request for a Bx launch reduction.  The serving engine
-    records this number per launch, so tests can assert both sides of
-    that trade (waste cap, launch economy).
+    plan, (d,) + (d,) for a ``diag`` plan, and (d+1)^2 homogeneous words
+    plus the 2d cull bounds for a ``projective`` plan (which also writes
+    a third, mask-sized pass: the in-kernel frustum-cull mask leaves at
+    point-buffer width).  Per-request dispatch of the same bucket moves
+    2*sum(n_i)*d*itemsize payload bytes but pays one launch per request;
+    the packed launch trades (lpad - n_i) rows of padding per request for
+    a Bx launch reduction.  The serving engine records this number per
+    launch, so tests can assert both sides of that trade (waste cap,
+    launch economy).
     """
-    param_words = d * d + d if kind == "matrix" else 2 * d
-    return 2 * bsz * lpad * d * itemsize + bsz * param_words * itemsize
+    return (chain_passes(kind) * bsz * lpad * d * itemsize
+            + bsz * chain_param_words(d, kind) * itemsize)

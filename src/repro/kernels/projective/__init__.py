@@ -1,0 +1,3 @@
+from repro.kernels.projective.ops import chain_project, chain_project_batch
+
+__all__ = ["chain_project", "chain_project_batch"]

@@ -1,0 +1,198 @@
+"""Pallas TPU kernels for fused projective (homogeneous) transform chains.
+
+The graphics companion paper maps full 2D/3D viewing pipelines -- model
+affines, camera, perspective/orthographic projection, cull, viewport --
+onto the same RC array as the source paper's affine primitives.  Here the
+whole folded pipeline is ONE lane-dense kernel over the flattened point
+buffer, extending the ``chain_matrix_1d`` discipline with a second rolled
+MAC set and an in-kernel divide:
+
+  * the linear block H[:d, :d] applies as the usual 2d-1 lane-rolled
+    multiply-adds against d-periodic coefficient rows;
+  * the perspective column H[:d, d] applies as a SECOND set of 2d-1 rolled
+    MACs producing each point's homogeneous w on every one of its lanes;
+  * the divide q = acc / w happens in-register (w <= 0 divides by 1 and is
+    masked out), followed by the axis-aligned cull test against per-lane
+    lo/hi bounds rows;
+  * the per-lane inlier bits are AND-reduced across each point's d lanes
+    with the same roll trick (wrapped or cross-point lanes contribute a
+    neutral 1), so the emitted mask is constant over a point's lanes.
+
+One HBM read of the points, one write of the projected points, one write
+of the mask -- no homogeneous-coordinate materialisation, no padding of
+the d-wide trailing axis to 128 lanes, and still pure VPU work.  The
+batched forms are row-aligned like ``chain_matrix_batch_2d``: request b's
+block row meets request b's folded (H, lo, hi), so a whole serving bucket
+of heterogeneous projective requests is a single launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.util import SUBLANES, pad_axis, stage_flat, stage_packed
+
+
+def _proj_rows(h: jnp.ndarray, lane_coord: jnp.ndarray, d: int):
+    """The rolled-MAC coefficient patterns for one homogeneous ``h``:
+    linear rows C_delta[j] = H[c+delta, c], perspective rows
+    W_delta[j] = H[c+delta, d], and the 0/1 same-point validity rows
+    G_delta[j] = [0 <= c+delta < d] (shared by the single-chain and
+    batched lowerings so the MAC and mask schedules cannot diverge).
+    Returns three (2d-1, g) stacks with g = len(lane_coord)."""
+    rows, wrows, grows = [], [], []
+    for delta in range(-(d - 1), d):
+        src = lane_coord + delta
+        valid = (src >= 0) & (src < d)
+        srcc = jnp.clip(src, 0, d - 1)
+        zero = jnp.zeros((), h.dtype)
+        rows.append(jnp.where(valid, h[srcc, lane_coord], zero))
+        wrows.append(jnp.where(valid, h[srcc, d], zero))
+        grows.append(valid.astype(h.dtype))
+    return jnp.stack(rows), jnp.stack(wrows), jnp.stack(grows)
+
+
+def _chain_project_kernel(x_ref, c_ref, wc_ref, g_ref, p_ref, o_ref, m_ref,
+                          *, d: int):
+    x = x_ref[...]
+    p = p_ref[...]                   # rows: t, w-translation, lo, hi
+    acc = jnp.zeros_like(x) + p[0:1, :]
+    wacc = jnp.zeros_like(x) + p[1:2, :]
+    for i, delta in enumerate(range(-(d - 1), d)):
+        xr = jnp.roll(x, -delta, axis=1)
+        acc = acc + xr * c_ref[i:i + 1, :]
+        wacc = wacc + xr * wc_ref[i:i + 1, :]
+    w_ok = wacc > 0.0
+    v = acc / jnp.where(w_ok, wacc, jnp.ones_like(wacc))
+    inl = jnp.where(w_ok & (v >= p[2:3, :]) & (v <= p[3:4, :]),
+                    jnp.ones_like(x), jnp.zeros_like(x))
+    mask = jnp.ones_like(x)
+    for i, delta in enumerate(range(-(d - 1), d)):
+        g = g_ref[i:i + 1, :]
+        mask = mask * (jnp.roll(inl, -delta, axis=1) * g + (1.0 - g))
+    o_ref[...] = v
+    m_ref[...] = mask
+
+
+@functools.partial(jax.jit, static_argnames=("d", "interpret", "block_rows",
+                                             "lane_target"))
+def chain_project_1d(flat: jnp.ndarray, h: jnp.ndarray, lo: jnp.ndarray,
+                     hi: jnp.ndarray, *, d: int, interpret: bool = False,
+                     block_rows: int | None = None,
+                     lane_target: int | None = None):
+    """Fused projective chain on the flat (N*d,) point buffer.
+
+    ``h`` is the folded (d+1, d+1) homogeneous matrix (row-vector
+    convention), ``lo``/``hi`` the (d,) cull bounds.  Returns the projected
+    flat buffer and a flat per-lane mask (constant across each point's d
+    lanes; 1.0 = inside).  ``block_rows``/``lane_target`` are the
+    autotuner's launch parameters (``None`` = historical defaults); they
+    steer staging only -- the MAC/divide schedule per lane is identical
+    under any staging, so every configuration is bit-identical."""
+    (l,) = flat.shape
+    if l == 0:
+        return flat, flat
+    xp, lane_coord, bm, w = stage_flat(flat, d, block_rows=block_rows,
+                                       lane_target=lane_target)
+    hc = h.astype(flat.dtype)
+    coef, wcoef, gmask = _proj_rows(hc, lane_coord, d)
+    prow = jnp.stack([hc[d, :d][lane_coord],
+                      jnp.broadcast_to(hc[d, d], (w,)),
+                      lo.astype(flat.dtype)[lane_coord],
+                      hi.astype(flat.dtype)[lane_coord]])
+    out, mask = pl.pallas_call(
+        functools.partial(_chain_project_kernel, d=d),
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, flat.dtype)] * 2,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, w), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANES, w), lambda i: (0, 0)),  # linear rows
+            pl.BlockSpec((SUBLANES, w), lambda i: (0, 0)),  # perspective rows
+            pl.BlockSpec((SUBLANES, w), lambda i: (0, 0)),  # same-point rows
+            pl.BlockSpec((SUBLANES, w), lambda i: (0, 0)),  # t/wt/lo/hi rows
+        ],
+        out_specs=[pl.BlockSpec((bm, w), lambda i: (i, 0))] * 2,
+        interpret=interpret,
+    )(xp, pad_axis(coef, 0, SUBLANES), pad_axis(wcoef, 0, SUBLANES),
+      pad_axis(gmask, 0, SUBLANES), pad_axis(prow, 0, SUBLANES))
+    return out.reshape(-1)[:l], mask.reshape(-1)[:l]
+
+
+def _chain_project_batch_kernel(x_ref, c_ref, wc_ref, g_ref, p_ref, o_ref,
+                                m_ref, *, d: int, g: int):
+    x = x_ref[...]                                   # (bm, wr) -- bm requests
+    bm, wr = x.shape
+    reps = wr // g
+    p = p_ref[...]                                   # (bm, 4g): t, wt, lo, hi
+    acc = jnp.zeros_like(x).reshape(bm, reps, g) + p[:, None, 0:g]
+    wacc = jnp.zeros_like(x).reshape(bm, reps, g) + p[:, None, g:2 * g]
+    for i, delta in enumerate(range(-(d - 1), d)):
+        xr = jnp.roll(x, -delta, axis=1).reshape(bm, reps, g)
+        acc = acc + xr * c_ref[...][:, None, i * g:(i + 1) * g]
+        wacc = wacc + xr * wc_ref[...][:, None, i * g:(i + 1) * g]
+    w_ok = wacc > 0.0
+    v = acc / jnp.where(w_ok, wacc, jnp.ones_like(wacc))
+    inl = jnp.where(w_ok & (v >= p[:, None, 2 * g:3 * g])
+                    & (v <= p[:, None, 3 * g:4 * g]),
+                    jnp.ones_like(v), jnp.zeros_like(v))
+    inl2 = inl.reshape(bm, wr)
+    mask = jnp.ones_like(inl)
+    for i, delta in enumerate(range(-(d - 1), d)):
+        gm = g_ref[...][0:1, None, i * g:(i + 1) * g]
+        mask = mask * (jnp.roll(inl2, -delta, axis=1).reshape(bm, reps, g)
+                       * gm + (1.0 - gm))
+    o_ref[...] = v.reshape(bm, wr)
+    m_ref[...] = mask.reshape(bm, wr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def chain_project_batch_2d(pts3: jnp.ndarray, h: jnp.ndarray,
+                           lo: jnp.ndarray, hi: jnp.ndarray, *,
+                           interpret: bool = False,
+                           block_rows: int | None = None):
+    """Batched folded projective chains: one launch for a whole bucket.
+
+    ``pts3`` is a packed (B, L, d) batch (one serving request per row,
+    padded to a common L); ``h`` (B, d+1, d+1) / ``lo``/``hi`` (B, d) are
+    per-request folded parameters.  Same rolled MAC + divide + mask
+    schedule as ``chain_project_1d`` -- rolls stay inside a block row, so
+    they never mix requests -- but every coefficient/bounds row is
+    *row-aligned* (request b's block row meets request b's parameters).
+    Returns the projected (B, L, d) batch and a (B, L) float mask.
+    ``block_rows`` pins the batch-axis block (``None`` = VMEM heuristic).
+    """
+    b, l, d = pts3.shape
+    if b == 0 or l == 0:
+        return pts3, jnp.zeros((b, l), pts3.dtype)
+    xp, lane_coord, bm, g = stage_packed(pts3, d, block_rows=block_rows)
+    hc = h.astype(pts3.dtype)
+    coef, wcoef, gmask = jax.vmap(
+        lambda hb: _proj_rows(hb, lane_coord, d))(hc)  # (B, 2d-1, g) each
+    coef = pad_axis(coef.reshape(b, (2 * d - 1) * g), 0, bm)
+    wcoef = pad_axis(wcoef.reshape(b, (2 * d - 1) * g), 0, bm)
+    grow = gmask[:1].reshape(1, (2 * d - 1) * g)       # same for every request
+    prow = pad_axis(jnp.concatenate([
+        hc[:, d, :d][:, lane_coord],
+        jnp.broadcast_to(hc[:, d, d][:, None], (b, g)),
+        lo.astype(pts3.dtype)[:, lane_coord],
+        hi.astype(pts3.dtype)[:, lane_coord]], axis=1), 0, bm)
+    out, mask = pl.pallas_call(
+        functools.partial(_chain_project_batch_kernel, d=d, g=g),
+        out_shape=[jax.ShapeDtypeStruct(xp.shape, pts3.dtype)] * 2,
+        grid=(xp.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((bm, (2 * d - 1) * g), lambda i: (i, 0)),
+            pl.BlockSpec((bm, (2 * d - 1) * g), lambda i: (i, 0)),
+            pl.BlockSpec((1, (2 * d - 1) * g), lambda i: (0, 0)),
+            pl.BlockSpec((bm, 4 * g), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bm, xp.shape[1]), lambda i: (i, 0))] * 2,
+        interpret=interpret,
+    )(xp, coef, wcoef, grow, prow)
+    out = out[:b, :l * d].reshape(b, l, d)
+    mask = mask[:b, :l * d].reshape(b, l, d)[:, :, 0]
+    return out, mask

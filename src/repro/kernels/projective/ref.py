@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the projective chain kernels (homogeneous form).
+
+The projective composite is the graphics companion paper's full viewing
+chain collapsed to a single homogeneous matrix: q_h = [p, 1] @ H, followed
+by ONE perspective divide q = q_h[:d] / w and an axis-aligned cull test.
+Like ``matmul.ref.chain_matrix``, the contraction is unrolled into
+elementwise multiply-adds for the point dims that occur in practice
+(d <= 3): a (N, 3) @ (4, 4) homogeneous product is a degenerate matmul on
+CPU, and the unrolled form fuses into the single memory pass the fused
+kernel is meant to be.  The accumulation order (left fold over m, then the
+translation row) is the contract the bit-for-bit oracle tests pin.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def chain_project(p: jnp.ndarray, h: jnp.ndarray, lo: jnp.ndarray,
+                  hi: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Folded projective chain on (..., d) points; H (d+1, d+1) row-vector
+    homogeneous, lo/hi (d,) axis-aligned cull bounds (+-inf = no cull).
+
+    Returns ``(projected (..., d), inside (...,) bool)``.  The divide is
+    guarded: points with w <= 0 (behind the center of projection) keep a
+    finite value (divided by 1) and are marked outside.  Bounds tests are
+    inclusive, so points exactly ON a frustum plane are inside.
+    """
+    h = jnp.asarray(h, jnp.float32)
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    d = p.shape[-1]
+    pf = p.astype(jnp.float32)
+    cols = [sum(pf[..., m] * h[m, c] for m in range(d)) + h[d, c]
+            for c in range(d)]
+    w = sum(pf[..., m] * h[m, d] for m in range(d)) + h[d, d]
+    w_ok = w > 0.0
+    safe = jnp.where(w_ok, w, jnp.ones_like(w))
+    v = jnp.stack([c / safe for c in cols], axis=-1)
+    inside = w_ok & jnp.all((v >= lo) & (v <= hi), axis=-1)
+    return v.astype(p.dtype), inside

@@ -10,12 +10,12 @@ plan, and bucket k+1's host->device staging overlaps bucket k's compute
 """
 from repro.serving.bucketing import padded_length, waste_fraction
 from repro.serving.engine import (BatchPlan, BucketReport, GeometryServer,
-                                  clear_plan_cache, get_batch_plan,
-                                  reset_stats, stats)
+                                  Projected, clear_plan_cache,
+                                  get_batch_plan, reset_stats, stats)
 from repro.serving.workload import chain_for, random_workload
 
 __all__ = [
-    "BatchPlan", "BucketReport", "GeometryServer", "chain_for",
+    "BatchPlan", "BucketReport", "GeometryServer", "Projected", "chain_for",
     "clear_plan_cache", "get_batch_plan", "padded_length", "random_workload",
     "reset_stats", "stats", "waste_fraction",
 ]

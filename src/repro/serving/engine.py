@@ -20,8 +20,11 @@ missing server loop, built from the paper's M1 execution discipline:
      (``TransformChain.fold``); the folded (A, t) pairs stack into the
      batch the kernels consume.
   3. **Launch** -- the whole bucket executes as a single fused kernel
-     launch (``kernels.chain_diag_batch`` / ``chain_apply_batch``), the
-     batched ``apply_many`` form of PR 1's one-HBM-pass chain kernels.
+     launch (``kernels.chain_diag_batch`` / ``chain_apply_batch`` /
+     ``chain_project_batch`` -- the last for projective viewing-chain
+     buckets, whose per-request results carry the in-kernel frustum-cull
+     mask as ``Projected.mask``), the batched ``apply_many`` form of
+     PR 1's one-HBM-pass chain kernels.
      Buckets whose packed batch exceeds the launch cap split into shards
      along the batch axis (and the packed buffer is placed through the
      ``distributed.sharding`` helpers when a device mesh is ambient).
@@ -51,8 +54,8 @@ import numpy as np
 from repro.autotune import cache as tuning
 from repro.core import transform_chain as tc
 from repro.distributed import sharding
-from repro.kernels import (chain_apply_batch, chain_diag_batch, dispatch,
-                           opcount)
+from repro.kernels import (chain_apply_batch, chain_diag_batch,
+                           chain_project_batch, dispatch, opcount)
 from repro.serving import bucketing
 
 #: serving statistics (observable by tests, benchmarks and the driver):
@@ -82,12 +85,48 @@ def clear_plan_cache() -> None:
     _BATCH_PLANS.clear()
 
 
+class Projected(np.ndarray):
+    """A projective request's serving result: the projected points as a
+    plain ndarray (shape-compatible with ``TransformChain.apply``
+    everywhere), with the per-point frustum-cull mask attached as
+    ``.mask`` (bool, the request's leading shape; True = inside).  The
+    mask rides along so existing consumers that treat results as arrays
+    keep working unchanged.  ``.mask`` describes EXACTLY the array
+    ``flush`` returned: derived arrays (slices, transposes, sorts, any
+    indexing -- same-shaped or not) read ``.mask`` as ``None`` rather
+    than inheriting a mask whose rows may no longer line up with
+    theirs.  Slice the mask alongside the points instead:
+    ``pts[sel], res.mask[sel]``."""
+
+    def __array_finalize__(self, obj):
+        # derived arrays NEVER inherit: a shape check cannot detect
+        # same-shape reorderings (r[::-1], fancy indexing), so the only
+        # honest mask is the one _projected() attaches explicitly
+        self._mask = None
+
+    @property
+    def mask(self) -> np.ndarray | None:
+        return self._mask
+
+    @mask.setter
+    def mask(self, value: np.ndarray | None) -> None:
+        self._mask = value
+
+
+def _projected(points: np.ndarray, mask: np.ndarray) -> Projected:
+    out = np.ascontiguousarray(points).view(Projected)
+    out.mask = mask
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class BatchPlan:
     """A compiled bucket executor: ``fn(folded_batch, pts3) -> out``
     (jitted), where ``folded_batch`` stacks the bucket's host-folded
-    per-request parameters -- (s (B,d), t (B,d)) or (A (B,d,d), t (B,d))."""
-    kind: str                      # "diag" | "matrix"
+    per-request parameters -- (s (B,d), t (B,d)), (A (B,d,d), t (B,d)),
+    or (H (B,d+1,d+1), lo (B,d), hi (B,d)).  Projective plans return
+    ``(projected (B,L,d), inside (B,L))``."""
+    kind: str                      # "diag" | "matrix" | "projective"
     dim: int
     backend: str
     fn: typing.Callable
@@ -95,13 +134,13 @@ class BatchPlan:
 
 def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
     dim, _ = structure
-    diagonal = tc.structure_is_diagonal(structure)
+    kind = tc.plan_kind_of(structure)
 
     # Tuning-cache consult at trace time, mirroring the chain compiler:
     # the packed (B, L) shape is concrete under the jit trace, so the
     # lookup keys on the bucket's real size class; staging-only knobs keep
     # every config bit-identical (see core.transform_chain._compile).
-    if diagonal:
+    if kind == "diag":
         def body(folded, pts3):
             stats["traces"] += 1
             s, t = folded
@@ -109,7 +148,7 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
                                     str(pts3.dtype),
                                     pts3.shape[0] * pts3.shape[1])
             return chain_diag_batch(pts3, s, t, backend=backend, config=cfg)
-    else:
+    elif kind == "matrix":
         def body(folded, pts3):
             stats["traces"] += 1
             a, t = folded
@@ -117,9 +156,17 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
                                     str(pts3.dtype),
                                     pts3.shape[0] * pts3.shape[1])
             return chain_apply_batch(pts3, a, t, backend=backend, config=cfg)
+    else:
+        def body(folded, pts3):
+            stats["traces"] += 1
+            h, lo, hi = folded
+            cfg = tuning.config_for("chain_project_batch", backend,
+                                    str(pts3.dtype),
+                                    pts3.shape[0] * pts3.shape[1])
+            return chain_project_batch(pts3, h, lo, hi, backend=backend,
+                                       config=cfg)
 
-    return BatchPlan(kind="diag" if diagonal else "matrix", dim=dim,
-                     backend=backend, fn=jax.jit(body))
+    return BatchPlan(kind=kind, dim=dim, backend=backend, fn=jax.jit(body))
 
 
 def get_batch_plan(structure: tuple, backend: str) -> BatchPlan:
@@ -152,7 +199,7 @@ class _Pending:
 class BucketReport:
     """Per-bucket accounting for one flush (the driver prints these)."""
     structure: str                 # e.g. "2D:TSRT"
-    kind: str                      # plan kind: diag | matrix
+    kind: str                      # plan kind: diag | matrix | projective
     lpad: int                      # padded points per request
     requests: int
     launches: int                  # 1 unless the bucket sharded
@@ -298,7 +345,11 @@ class GeometryServer:
         buckets: dict[tuple, list[_Pending]] = {}
         for p in pending:
             if len(p.chain) == 0 or p.n == 0:
-                results[p.ticket] = p.points               # identity / empty
+                res = p.points                             # identity / empty
+                if p.chain.is_projective:                  # (only n == 0
+                    res = _projected(                      #  can be here)
+                        res, np.ones(res.shape[:-1], bool))
+                results[p.ticket] = res
             else:
                 buckets.setdefault(self._bucket_key(p, backend), []).append(p)
 
@@ -350,10 +401,20 @@ class GeometryServer:
         # batching just removed).  Each result is a payload-sized COPY:
         # a view would be read-only and would pin the whole padded batch
         # buffer for as long as the caller keeps any one result.
+        # Projective launches return (points, mask); their results carry
+        # the per-point cull mask as ``Projected.mask``.
         for (plan, lpad, _st, _pk, reqs), out in zip(launches, outs):
-            host = np.asarray(out)
-            for i, r in enumerate(reqs):
-                results[r.ticket] = np.array(
-                    host[i, :r.n].reshape(r.points.shape))
+            if plan.kind == "projective":
+                host, mask = np.asarray(out[0]), np.asarray(out[1])
+                for i, r in enumerate(reqs):
+                    results[r.ticket] = _projected(
+                        np.array(host[i, :r.n].reshape(r.points.shape)),
+                        np.array(mask[i, :r.n]
+                                 .reshape(r.points.shape[:-1])))
+            else:
+                host = np.asarray(out)
+                for i, r in enumerate(reqs):
+                    results[r.ticket] = np.array(
+                        host[i, :r.n].reshape(r.points.shape))
         stats["requests"] += len(pending)
         return [results[p.ticket] for p in pending]

@@ -25,7 +25,10 @@ def timed(fn) -> float:
     return time.perf_counter() - t0
 
 #: structure templates: (dim, kind string).  A workload samples a subset,
-#: mixing diagonal (TS/A-only) and general (R/M) chains across 2D and 3D.
+#: mixing diagonal (TS/A-only), general (R/M), and projective (P/C --
+#: graphics viewing pipelines) chains across 2D and 3D.  New templates
+#: append at the END so seeded prefixes (``TEMPLATES[:k]``) stay
+#: bit-reproducible across PRs.
 TEMPLATES: tuple[tuple[int, str], ...] = (
     (2, "TSRT"),          # the paper's translate/scale/rotate composite
     (2, "TST"),           # diagonal: folds to one affine, VPU-only plan
@@ -35,7 +38,25 @@ TEMPLATES: tuple[tuple[int, str], ...] = (
     (3, "SAT"),           # 3D diagonal
     (3, "RMRT"),          # 3D general with custom matrix
     (2, "TTSS"),          # diagonal, exercises translate/scale folding
+    (3, "TSRP"),          # model affines + perspective projection
+    (3, "MPC"),           # camera (look-at affine) + projection + cull
+    (2, "TSP"),           # 2D projective touch-up
 )
+
+
+def random_projective(rng: np.random.Generator, dim: int) -> np.ndarray:
+    """A well-conditioned random (d+1, d+1) projective matrix: a gentle
+    perspective column keeps w = 1 + p.c positive for typical workload
+    points (outliers get culled by the w > 0 mask, which is itself part
+    of what the serving path must reproduce).  The ONE recipe -- served
+    traffic (``chain_for``) and the autotuner's timing inputs
+    (``autotune.search.tune_chain``) both draw from it, so tuned configs
+    are measured on the distribution that is actually served."""
+    m = np.eye(dim + 1, dtype=np.float32)
+    m[:dim, :dim] += rng.uniform(-0.3, 0.3, (dim, dim))
+    m[dim, :dim] = rng.uniform(-1, 1, dim)
+    m[:dim, dim] = rng.uniform(-0.05, 0.05, dim)
+    return m
 
 
 def chain_for(rng: np.random.Generator, dim: int, kinds: str) -> TransformChain:
@@ -58,6 +79,11 @@ def chain_for(rng: np.random.Generator, dim: int, kinds: str) -> TransformChain:
             m[:dim, :dim] += rng.uniform(-0.4, 0.4, (dim, dim))
             m[dim, :dim] = rng.uniform(-2, 2, dim)
             chain = chain.matrix(m)
+        elif kind == "P":
+            chain = chain.projective(random_projective(rng, dim))
+        elif kind == "C":
+            chain = chain.cull(float(rng.uniform(-6, -3)),
+                               float(rng.uniform(3, 6)))
         else:
             raise ValueError(f"unknown primitive kind {kind!r}")
     return chain

@@ -1,0 +1,622 @@
+"""Projective graphics-pipeline tests: the homogeneous fold, the fused
+``chain_project_*`` kernels against a numpy homogeneous oracle (bit-for-bit
+on the ref backend), cull-mask edge cases (w <= 0, points exactly on
+frustum planes), plan-cache no-retrace behaviour, the Camera/Viewport
+pipeline semantics, and projective serving through the GeometryServer.
+
+``hypothesis`` is an OPTIONAL dependency (see tests/README.md): the
+property tests below are skipped without it; deterministic seeded sweeps
+of the same invariants always run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # optional dep -- skip, don't fail
+    HAVE_HYPOTHESIS = False
+
+    class _NoStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NoStrategies()
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (optional dep)")(f)
+
+from repro import graphics, kernels, serving
+from repro.core import transform_chain as tc
+from repro.kernels import opcount
+from repro.serving import workload
+
+RNG = np.random.default_rng(1904)
+
+
+# ---------------------------------------------------------------------------
+# oracles
+# ---------------------------------------------------------------------------
+
+def np_project(h, lo, hi, pts):
+    """The numpy homogeneous oracle: q_h = [p, 1] @ H unrolled with the
+    SAME accumulation order as the jnp ref (left fold over m, then the
+    translation row), guarded divide, inclusive bounds.  float32
+    throughout -- the ref backend must match this bit for bit."""
+    h = np.asarray(h, np.float32)
+    lo = np.asarray(lo, np.float32)
+    hi = np.asarray(hi, np.float32)
+    d = pts.shape[-1]
+    pf = pts.astype(np.float32)
+    cols = [sum(pf[..., m] * h[m, c] for m in range(d)) + h[d, c]
+            for c in range(d)]
+    w = sum(pf[..., m] * h[m, d] for m in range(d)) + h[d, d]
+    w_ok = w > 0.0
+    safe = np.where(w_ok, w, np.float32(1.0))
+    v = np.stack([c / safe for c in cols], axis=-1).astype(np.float32)
+    inside = w_ok & np.all((v >= lo) & (v <= hi), axis=-1)
+    return v, inside
+
+
+def sequential_oracle64(chain, pts):
+    """Independent per-primitive float64 oracle: walk the chain on
+    homogeneous (q, w) coordinates, testing cull primitives in their own
+    coordinate space.  Returns (projected, inside, w) in float64."""
+    d = chain.dim
+    q = np.asarray(pts, np.float64)
+    w = np.ones(q.shape[:-1], np.float64)
+    inside = np.ones(q.shape[:-1], bool)
+    for (kind, axis), val in zip(chain.kinds, chain.params):
+        if kind == "T":
+            q = q + w[..., None] * np.broadcast_to(
+                np.asarray(val, np.float64), (d,))
+        elif kind == "S":
+            q = q * np.broadcast_to(np.asarray(val, np.float64), (d,))
+        elif kind == "A":
+            s = np.broadcast_to(np.asarray(val[0], np.float64), (d,))
+            t = np.broadcast_to(np.asarray(val[1], np.float64), (d,))
+            q = q * s + w[..., None] * t
+        elif kind == "R":
+            c, s = np.cos(float(val)), np.sin(float(val))
+            if d == 2:
+                r = np.array([[c, s], [-s, c]])
+            else:
+                r = np.eye(3)
+                i, j = [(1, 2), (2, 0), (0, 1)][axis]
+                r[i, i] = r[j, j] = c
+                r[i, j], r[j, i] = s, -s
+            q = q @ r
+        elif kind == "M":
+            m = np.asarray(val, np.float64)
+            if m.shape == (d + 1, d + 1):
+                q = q @ m[:d, :d] + w[..., None] * m[d, :d]
+            else:
+                q = q @ m
+        elif kind == "P":
+            m = np.asarray(val, np.float64)
+            qh = np.concatenate([q, w[..., None]], axis=-1) @ m
+            q, w = qh[..., :d], qh[..., d]
+        else:                               # "C"
+            lo = np.broadcast_to(np.asarray(val[0], np.float64), (d,))
+            hi = np.broadcast_to(np.asarray(val[1], np.float64), (d,))
+            ndc = q / np.where(w > 0, w, 1.0)[..., None]
+            inside &= (w > 0) & np.all((ndc >= lo) & (ndc <= hi), axis=-1)
+    inside &= w > 0
+    return q / np.where(w > 0, w, 1.0)[..., None], inside, w
+
+
+def random_projective_chain(rng, dim, length):
+    """A random chain guaranteed projective: affine primitives plus at
+    least one gentle projective matrix; an optional trailing cull (only
+    T/S/A may follow it, per the fold's contract)."""
+    chain = tc.TransformChain.identity(dim)
+    p_at = int(rng.integers(0, length))
+    for i in range(length):
+        kind = "P" if i == p_at else \
+            str(rng.choice(["T", "S", "R", "A", "M", "P"]))
+        if kind == "T":
+            chain = chain.translate(*rng.uniform(-2, 2, dim).tolist())
+        elif kind == "S":
+            chain = chain.scale(*rng.uniform(0.3, 1.8, dim).tolist())
+        elif kind == "R":
+            theta = float(rng.uniform(-np.pi, np.pi))
+            chain = chain.rotate(theta) if dim == 2 else \
+                chain.rotate(theta, axis=int(rng.integers(3)))
+        elif kind == "A":
+            chain = chain.affine(rng.uniform(0.3, 1.8, dim).tolist(),
+                                 rng.uniform(-1, 1, dim).tolist())
+        elif kind == "M":
+            m = np.eye(dim + 1, dtype=np.float32)
+            m[:dim, :dim] += rng.uniform(-0.3, 0.3, (dim, dim))
+            m[dim, :dim] = rng.uniform(-1, 1, dim)
+            chain = chain.matrix(m)
+        else:
+            m = np.eye(dim + 1, dtype=np.float32)
+            m[:dim, :dim] += rng.uniform(-0.2, 0.2, (dim, dim))
+            m[dim, :dim] = rng.uniform(-0.5, 0.5, dim)
+            m[:dim, dim] = rng.uniform(-0.03, 0.03, dim)
+            chain = chain.projective(m)
+    if rng.random() < 0.5:
+        chain = chain.cull(float(rng.uniform(-8, -3)),
+                           float(rng.uniform(3, 8)))
+        chain = chain.affine(rng.uniform(0.5, 1.5, dim).tolist(),
+                             rng.uniform(-1, 1, dim).tolist())
+    return chain
+
+
+# ---------------------------------------------------------------------------
+# fused == numpy homogeneous oracle, bit-for-bit on ref
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim", [2, 3])
+@pytest.mark.parametrize("length", [1, 2, 4, 7])
+def test_ref_matches_numpy_oracle_bitwise(dim, length):
+    """The ref-backend kernel entry IS the numpy homogeneous oracle, bit
+    for bit (the fold is shared numpy; the eager entry runs op-for-op
+    what the oracle runs).  The jitted plan path (``chain.project``)
+    additionally agrees to last-ULP scale -- XLA:CPU reserves per-program
+    freedom in contracting multiply-adds (see the chain compiler's
+    folding note), which is the repo-wide standing exception."""
+    rng = np.random.default_rng(10 * dim + length)
+    for _ in range(3):
+        chain = random_projective_chain(rng, dim, length)
+        n = int(rng.integers(1, 300))
+        pts = rng.uniform(-1.5, 1.5, (n, dim)).astype(np.float32)
+        exp, mexp = np_project(*chain.fold(), pts)
+        got, mask = kernels.chain_project(jnp.asarray(pts), *chain.fold(),
+                                          backend="ref")
+        np.testing.assert_array_equal(np.asarray(got), exp)
+        np.testing.assert_array_equal(np.asarray(mask), mexp)
+        got_p, mask_p = chain.project(jnp.asarray(pts), backend="ref")
+        np.testing.assert_allclose(np.asarray(got_p), exp,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(mask_p), mexp)
+
+
+@pytest.mark.parametrize("dim", [2, 3])
+def test_fused_matches_float64_sequential_oracle(dim):
+    """The fold itself is correct: an independent per-primitive float64
+    walk agrees with the one-matrix fold (away from w ~ 0, where the
+    float32 fold legitimately loses relative precision)."""
+    rng = np.random.default_rng(77 + dim)
+    for length in (2, 4, 6):
+        chain = random_projective_chain(rng, dim, length)
+        pts = rng.uniform(-1.5, 1.5, (123, dim)).astype(np.float32)
+        got, mask = chain.project(jnp.asarray(pts), backend="ref")
+        exp, mexp, w64 = sequential_oracle64(chain, pts)
+        ok = np.abs(w64) > 0.2
+        np.testing.assert_allclose(np.asarray(got)[ok], exp[ok],
+                                   rtol=2e-4, atol=2e-4)
+        far = np.abs(w64) > 1e-3            # mask can only flip at w ~ 0
+        assert (np.asarray(mask) == mexp)[far].all()
+
+
+@pytest.mark.parametrize("dim", [2, 3])
+def test_interpret_kernel_matches_ref(dim):
+    rng = np.random.default_rng(5 + dim)
+    for length in (1, 3, 5):
+        chain = random_projective_chain(rng, dim, length)
+        for n in (1, 7, 129, 1000):
+            pts = rng.uniform(-1.5, 1.5, (n, dim)).astype(np.float32)
+            got_i, m_i = chain.project(jnp.asarray(pts), backend="interpret")
+            got_r, m_r = chain.project(jnp.asarray(pts), backend="ref")
+            np.testing.assert_allclose(np.asarray(got_i), np.asarray(got_r),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(m_i), np.asarray(m_r))
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_batch_kernel_matches_per_request(backend):
+    """chain_project_batch over a packed (B, L, d) batch reproduces each
+    row's single-chain chain_project."""
+    rng = np.random.default_rng(23)
+    for d in (2, 3):
+        bsz, l = 5, 40
+        pts3 = rng.uniform(-1.5, 1.5, (bsz, l, d)).astype(np.float32)
+        hs, los, his = [], [], []
+        for _ in range(bsz):
+            h, lo, hi = random_projective_chain(rng, d, 3).fold()
+            hs.append(h), los.append(lo), his.append(hi)
+        h3, lo2, hi2 = np.stack(hs), np.stack(los), np.stack(his)
+        out, mask = kernels.chain_project_batch(
+            jnp.asarray(pts3), h3, lo2, hi2, backend=backend)
+        for b in range(bsz):
+            exp, mexp = kernels.chain_project(
+                jnp.asarray(pts3[b]), hs[b], los[b], his[b],
+                backend=backend)
+            np.testing.assert_allclose(np.asarray(out[b]), np.asarray(exp),
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(mask[b]),
+                                          np.asarray(mexp))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.sampled_from([2, 3]), length=st.integers(1, 6),
+       seed=st.integers(0, 2 ** 31 - 1), n=st.integers(1, 200))
+def test_hypothesis_fused_equals_numpy_oracle(dim, length, seed, n):
+    rng = np.random.default_rng(seed)
+    chain = random_projective_chain(rng, dim, length)
+    pts = rng.uniform(-1.5, 1.5, (n, dim)).astype(np.float32)
+    got, mask = kernels.chain_project(jnp.asarray(pts), *chain.fold(),
+                                      backend="ref")
+    exp, mexp = np_project(*chain.fold(), pts)
+    np.testing.assert_array_equal(np.asarray(got), exp)
+    np.testing.assert_array_equal(np.asarray(mask), mexp)
+
+
+# ---------------------------------------------------------------------------
+# cull-mask edge cases
+# ---------------------------------------------------------------------------
+
+def test_w_nonpositive_is_culled_and_finite():
+    """Points behind the center of projection (w < 0) and AT it (w == 0)
+    are masked out, and their coordinates stay finite (guarded divide)."""
+    # w = z: the z coordinate is the homogeneous weight
+    h = np.eye(4, dtype=np.float32)
+    h[2, 3], h[3, 3] = 1.0, 0.0
+    chain = tc.TransformChain.identity(3).projective(h)
+    pts = np.array([[1.0, 2.0, 4.0],      # w = 4  -> inside
+                    [1.0, 2.0, -1.0],     # w = -1 -> culled
+                    [1.0, 2.0, 0.0]],     # w = 0 exactly -> culled
+                   np.float32)
+    out, mask = chain.project(jnp.asarray(pts), backend="ref")
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, False])
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out)[0], [0.25, 0.5, 1.0],
+                               rtol=1e-6)
+    out_i, mask_i = chain.project(jnp.asarray(pts), backend="interpret")
+    np.testing.assert_array_equal(np.asarray(mask_i), [True, False, False])
+    assert np.isfinite(np.asarray(out_i)).all()
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_points_on_frustum_planes_are_inside(backend):
+    """The cull is inclusive: NDC exactly +-1 is inside; one ulp beyond
+    is outside."""
+    eps = np.float32(np.finfo(np.float32).eps)
+    chain = tc.TransformChain.identity(2).cull(-1.0, 1.0)
+    pts = np.array([[1.0, -1.0],          # both coords ON planes -> inside
+                    [1.0 + 2 * eps, 0.0],  # just beyond +1 -> outside
+                    [0.0, -1.0 - 2 * eps],  # just beyond -1 -> outside
+                    [0.5, 0.5]], np.float32)
+    out, mask = chain.project(jnp.asarray(pts), backend=backend)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True, False, False, True])
+    # a cull-only chain projects through H = I: points pass unchanged
+    np.testing.assert_array_equal(np.asarray(out), pts)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_mask_is_per_point_not_per_coordinate(backend):
+    """One out-of-bounds coordinate culls the WHOLE point (the in-kernel
+    group-AND across the point's d lanes)."""
+    chain = tc.TransformChain.identity(3).cull(-1.0, 1.0)
+    pts = np.array([[0.0, 0.0, 0.0],
+                    [0.0, 5.0, 0.0],      # only y out of bounds
+                    [0.0, 0.0, -5.0]],    # only z out of bounds
+                   np.float32)
+    _, mask = chain.project(jnp.asarray(pts), backend=backend)
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, False])
+
+
+def test_cull_bounds_fold_through_viewport():
+    """cull(-1, 1) followed by a viewport affine culls against the
+    MAPPED bounds: the same points survive with and without the viewport
+    suffix (negative scales flip the bounds correctly too)."""
+    rng = np.random.default_rng(3)
+    pts = rng.uniform(-2, 2, (200, 2)).astype(np.float32)
+    base = tc.TransformChain.identity(2).scale(0.7, 1.3).cull(-1.0, 1.0)
+    _, mask0 = base.project(jnp.asarray(pts), backend="ref")
+    for s in ((8.0, 4.0), (-8.0, 4.0), (3.0, -2.0)):
+        suff = base.affine(s, (1.0, -2.0))
+        _, mask1 = suff.project(jnp.asarray(pts), backend="ref")
+        np.testing.assert_array_equal(np.asarray(mask1), np.asarray(mask0))
+
+
+def test_matrix_rejects_perspective_column():
+    """A perspective matrix must go through projective(): matrix() would
+    silently drop the perspective column (no divide), so the fold rejects
+    a non-affine homogeneous matrix outright."""
+    persp = graphics.perspective(np.pi / 3, 1.0, 0.5, 40.0)
+    with pytest.raises(ValueError, match="projective"):
+        tc.TransformChain.identity(3).matrix(persp).fold()
+    with pytest.raises(ValueError, match="projective"):
+        # same trap inside a projective chain's M primitive
+        tc.TransformChain.identity(3).matrix(persp).cull().fold()
+    # affine homogeneous matrices keep working through matrix()
+    ok = tc.TransformChain.identity(3).matrix(graphics.look_at(
+        (1.0, 2.0, 3.0), (0.0, 0.0, 0.0)))
+    ok.fold()
+
+
+def test_projected_mask_never_inherited_by_derived_arrays():
+    """.mask describes exactly the array flush() returned: ANY derived
+    array -- slice, transpose, reshape, reversal, fancy index (a shape
+    check could not catch the same-shape reorderings) -- reads it as
+    None instead of silently pairing points with another point's
+    inside/outside flag."""
+    res = serving.engine._projected(
+        np.arange(18, dtype=np.float32).reshape(6, 3),
+        np.array([1, 0, 1, 0, 1, 0], bool))
+    assert res.mask is not None and res.mask.shape == (6,)
+    assert res[:4].mask is None              # shorter slice
+    assert res.T.mask is None                # transpose
+    assert res.reshape(-1).mask is None      # reshape
+    assert res[::-1].mask is None            # same-shape reordering
+    assert res[np.argsort(res[:, 0])[::-1]].mask is None  # fancy index
+    assert (res * 2).mask is None            # ufunc result
+
+
+def test_fold_rejects_nonaffine_after_cull():
+    base = tc.TransformChain.identity(2).cull()
+    for bad in (base.rotate(0.3),
+                base.matrix(np.eye(2, dtype=np.float32)),
+                base.projective(np.eye(3, dtype=np.float32))):
+        with pytest.raises(ValueError):
+            bad.fold()
+    with pytest.raises(ValueError):       # wrong projective matrix shape
+        tc.TransformChain.identity(2).projective(np.eye(4)).fold()
+
+
+# ---------------------------------------------------------------------------
+# plan cache / API surface
+# ---------------------------------------------------------------------------
+
+def test_projective_plan_cache_no_retrace():
+    tc.clear_plan_cache()
+    tc.reset_stats()
+    pts = jnp.asarray(RNG.standard_normal((50, 3)), jnp.float32)
+    rng = np.random.default_rng(0)
+    chain = random_projective_chain(rng, 3, 4)
+    assert chain.plan_kind == "projective"
+    chain.project(pts, backend="ref")
+    assert tc.stats["compiles"] == 1 and tc.stats["traces"] == 1
+    # same structure, same shape, repeated project/apply (apply shares
+    # the plan with project): cache hits, no retrace
+    chain.project(pts, backend="ref")
+    chain.apply(pts, backend="ref")
+    assert tc.stats["compiles"] == 1
+    assert tc.stats["traces"] == 1, "seen structure+shape must not retrace"
+    # new shape retraces once, no recompile
+    chain.project(jnp.asarray(RNG.standard_normal((7, 3)), jnp.float32),
+                  backend="ref")
+    assert tc.stats["compiles"] == 1 and tc.stats["traces"] == 2
+
+
+def test_apply_equals_project_points_and_affine_project_is_trivial():
+    rng = np.random.default_rng(9)
+    pts = jnp.asarray(rng.standard_normal((40, 2)), jnp.float32)
+    proj = random_projective_chain(rng, 2, 3)
+    np.testing.assert_array_equal(
+        np.asarray(proj.apply(pts, backend="ref")),
+        np.asarray(proj.project(pts, backend="ref")[0]))
+    affine = tc.TransformChain.identity(2).scale(2.0).translate(1.0, -1.0)
+    out, mask = affine.project(pts, backend="ref")
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(affine.apply(pts,
+                                                          backend="ref")))
+    assert np.asarray(mask).all()
+    with pytest.raises(ValueError):
+        proj.folded()                      # no (A, t) form
+
+
+def test_traced_params_rejected_for_projective():
+    import jax
+    pts = jnp.asarray(RNG.standard_normal((8, 2)), jnp.float32)
+
+    def f(theta):
+        return (tc.TransformChain.identity(2).rotate(theta)
+                .projective(np.eye(3, dtype=np.float32))
+                .apply(pts)).sum()
+
+    with pytest.raises(NotImplementedError):
+        jax.grad(f)(0.3)
+
+
+# ---------------------------------------------------------------------------
+# one-launch / byte accounting (the acceptance claim)
+# ---------------------------------------------------------------------------
+
+def test_projective_chain_is_one_launch_and_fewer_bytes():
+    """A composite chain ending in a perspective projection executes as
+    ONE fused kernel launch; staged per-primitive dispatch pays one
+    launch and one HBM round-trip per stage."""
+    n = 4096
+    pts = jnp.asarray(RNG.standard_normal((n, 3)) * 0.5, jnp.float32)
+    cam = graphics.Camera(eye=(2.0, 1.0, 4.0), near=0.5, far=30.0)
+    chain = graphics.viewing_chain(
+        model=tc.TransformChain.identity(3).rotate(0.4, axis="y")
+        .scale(1.2).translate(0.1, 0.0, 0.0),
+        camera=cam, viewport=graphics.Viewport(0, 0, 640, 480))
+    singles = [tc.TransformChain(chain.dim, (ka,), (p,))
+               for ka, p in zip(chain.kinds, chain.params)]
+    with opcount.counting() as staged:
+        q = pts
+        for single in singles:
+            q = single.apply(q, backend="ref")
+    with opcount.counting() as fused:
+        chain.project(pts, backend="ref")
+    assert len(fused) == 1                 # the whole pipeline: one launch
+    assert len(staged) == len(chain)       # one launch per stage
+    (op, nbytes), = fused
+    assert op == "chain_fused_projective"
+    d = 3
+    assert nbytes == 3 * pts.nbytes + 4 * ((d + 1) ** 2 + 2 * d)
+    assert nbytes < opcount.total_bytes(staged)
+
+
+def test_packed_projective_bytes_match_opcount():
+    from repro.autotune import costmodel
+    for bsz, lpad, d in ((8, 64, 2), (3, 128, 3)):
+        est = costmodel.packed_chain_cost(bsz, lpad, d, "projective")
+        assert est.hbm_bytes == opcount.packed_chain_bytes(
+            bsz, lpad, d, kind="projective")
+        assert est.kernel == "chain_project_batch"
+
+
+# ---------------------------------------------------------------------------
+# serving: projective buckets through the GeometryServer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+def test_server_buckets_projective_chains_into_one_launch(backend):
+    """Many requests sharing one viewing-chain structure = ONE launch,
+    and every result carries the same mask per-request project returns."""
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    rng = np.random.default_rng(31)
+    cam = graphics.Camera(eye=(0.0, 1.0, 5.0), near=0.5, far=25.0)
+    reqs = []
+    for _ in range(10):
+        model = (tc.TransformChain.identity(3)
+                 .rotate(float(rng.uniform(-1, 1)), axis="y")
+                 .scale(float(rng.uniform(0.8, 1.2))))
+        chain = graphics.viewing_chain(
+            model=model, camera=cam,
+            viewport=graphics.Viewport(0, 0, 64, 48))
+        pts = rng.uniform(-1.5, 1.5,
+                          (int(rng.integers(33, 64)), 3)).astype(np.float32)
+        reqs.append((chain, pts))        # every length pads to lpad=64
+    srv = serving.GeometryServer(backend=backend)
+    outs = srv.serve(reqs)
+    assert serving.stats["launches"] == 1
+    assert srv.last_report[0].kind == "projective"
+    for (chain, pts), out in zip(reqs, outs):
+        assert isinstance(out, serving.Projected)
+        exp, mexp = chain.project(jnp.asarray(pts), backend=backend)
+        np.testing.assert_array_equal(np.asarray(out.mask),
+                                      np.asarray(mexp))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_server_mixed_affine_projective_workload_saves_launches():
+    """The acceptance workload: a mixed affine+projective 64-request mix
+    serves in far fewer launches than requests, projective buckets
+    included."""
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    reqs = workload.random_workload(seed=2207, n_requests=64,
+                                    max_points=512)
+    n_proj = sum(1 for c, _ in reqs if c.is_projective)
+    assert n_proj > 0, "the template pool must include projective chains"
+    srv = serving.GeometryServer(backend="ref")
+    outs = srv.serve(reqs)
+    assert serving.stats["requests"] == 64
+    assert serving.stats["launches"] < 64
+    assert any(r.kind == "projective" for r in srv.last_report)
+    for (chain, pts), out in zip(reqs, outs):
+        if chain.is_projective:
+            assert isinstance(out, serving.Projected)
+            assert out.mask.shape == pts.shape[:-1]
+
+
+def test_serving_records_projective_packed_bytes():
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    rng = np.random.default_rng(7)
+    chain_rng = np.random.default_rng(2)
+    reqs = [(workload.chain_for(chain_rng, 2, "TSP"),
+             rng.uniform(-1, 1, (60, 2)).astype(np.float32))
+            for _ in range(8)]                    # one bucket, lpad=64
+    srv = serving.GeometryServer(backend="ref")
+    with opcount.counting() as records:
+        srv.serve(reqs)
+    serve_records = [r for r in records if r[0] == "serve_bucket_projective"]
+    assert len(serve_records) == serving.stats["launches"] == 1
+    (_, nbytes), = serve_records
+    assert nbytes == opcount.packed_chain_bytes(8, 64, 2, kind="projective")
+
+
+def test_empty_projective_request_passes_through():
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    srv = serving.GeometryServer(backend="ref")
+    chain = workload.chain_for(np.random.default_rng(0), 3, "TSRP")
+    srv.submit(chain, np.zeros((0, 3), np.float32))
+    (out,) = srv.flush()
+    assert isinstance(out, serving.Projected)
+    assert out.shape == (0, 3) and out.mask.shape == (0,)
+    assert serving.stats["launches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Camera / Viewport semantics
+# ---------------------------------------------------------------------------
+
+def test_look_at_centers_target_and_culls_behind():
+    cam = graphics.Camera(eye=(3.0, 2.0, 5.0), target=(0.5, -0.5, 1.0),
+                          fov_y=np.pi / 2, near=0.1, far=100.0)
+    vp = graphics.Viewport(0.0, 0.0, 640.0, 480.0)
+    chain = graphics.viewing_chain(camera=cam, viewport=vp)
+    eye = np.asarray(cam.eye, np.float32)
+    tgt = np.asarray(cam.target, np.float32)
+    behind = eye + (eye - tgt)               # mirrored through the eye
+    out, mask = chain.project(
+        jnp.asarray(np.stack([tgt, behind])), backend="ref")
+    assert bool(mask[0]) and not bool(mask[1])   # target visible, not behind
+    np.testing.assert_allclose(np.asarray(out)[0, :2], [320.0, 240.0],
+                               atol=1e-3)        # target -> viewport center
+
+
+def test_perspective_near_far_map_to_depth_range():
+    cam = graphics.Camera(eye=(0.0, 0.0, 0.0), target=(0.0, 0.0, -1.0),
+                          fov_y=np.pi / 2, near=1.0, far=10.0)
+    vp = graphics.Viewport(0.0, 0.0, 2.0, 2.0, depth=(0.0, 1.0))
+    chain = graphics.viewing_chain(camera=cam, viewport=vp)
+    pts = np.array([[0.0, 0.0, -1.0],        # on the near plane
+                    [0.0, 0.0, -10.0],       # on the far plane
+                    [0.0, 0.0, -0.5],        # nearer than near -> culled
+                    [0.0, 0.0, -20.0]],      # beyond far -> culled
+                   np.float32)
+    out, mask = chain.project(jnp.asarray(pts), backend="ref")
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True, True, False, False])
+    np.testing.assert_allclose(np.asarray(out)[0, 2], 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out)[1, 2], 1.0, atol=1e-5)
+
+
+def test_orthographic_keeps_w_one_and_culls_on_bounds():
+    h = graphics.orthographic(-2.0, 2.0, -1.0, 1.0, 1.0, 10.0)
+    chain = tc.TransformChain.identity(3).projective(h).cull()
+    pts = np.array([[0.0, 0.0, -5.0],
+                    [3.0, 0.0, -5.0],        # x outside the box
+                    [0.0, 0.0, -20.0]],      # beyond far
+                   np.float32)
+    out, mask = chain.project(jnp.asarray(pts), backend="ref")
+    np.testing.assert_array_equal(np.asarray(mask), [True, False, False])
+    # z = -5 with near=1, far=10: z' = -2z/(f-n) - (f+n)/(f-n) = -1/9
+    np.testing.assert_allclose(np.asarray(out)[0], [0.0, 0.0, -1.0 / 9.0],
+                               atol=1e-5)
+
+
+def test_camera_validation():
+    with pytest.raises(ValueError):
+        graphics.look_at((0, 0, 0), (0, 0, 0))          # degenerate view
+    with pytest.raises(ValueError):
+        graphics.perspective(0.0, 1.0, 0.1, 10.0)       # bad fov
+    with pytest.raises(ValueError):
+        graphics.perspective(1.0, 1.0, 5.0, 1.0)        # near >= far
+    with pytest.raises(ValueError):
+        graphics.Viewport().scale_offset(4)
+    with pytest.raises(ValueError):
+        graphics.viewing_chain(2, camera=graphics.Camera())  # 3D cam, 2D
+
+
+def test_workload_projective_templates_are_reproducible():
+    """The seeded workload's projective templates fold bit-identically
+    across draws with the same seed (the serving/autotune benches rely
+    on it)."""
+    a = workload.random_workload(seed=41, n_requests=22, max_points=64)
+    b = workload.random_workload(seed=41, n_requests=22, max_points=64)
+    assert any(c.is_projective for c, _ in a)
+    for (ca, pa), (cb, pb) in zip(a, b):
+        assert ca.structure == cb.structure
+        np.testing.assert_array_equal(pa, pb)
+        for fa, fb in zip(ca.fold(), cb.fold()):
+            np.testing.assert_array_equal(fa, fb)

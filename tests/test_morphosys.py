@@ -1,7 +1,9 @@
 """Faithful-reproduction tests: M1 emulator + Intel cycle models vs paper."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import transform_chain as tc
 from repro.core.morphosys import intel, programs, rc_array
 
 
@@ -92,6 +94,39 @@ class TestFunctionalCorrectness:
         r = programs.run_rotation_points((3, 4), pts)
         rot = np.array([[3, -4], [4, 3]])
         np.testing.assert_array_equal(r.values, programs.oracle_matmul(rot, pts))
+
+    @pytest.mark.parametrize("theta", [0.35, -1.1, 2.4])
+    def test_rotation_points_match_chain_compiler_q7(self, theta):
+        """Paper-fidelity cross-check: the M1 fixed-point rotation (Q7
+        cos/sin, |coef| < 128 for the 8-bit context immediate) agrees
+        with the chain compiler's rotation fold within quantization
+        tolerance -- the emulator and the Pallas path compute the same
+        transformation.
+
+        Conventions line up exactly: the emulator's [[c,-s],[s,c]] @
+        column-points equals the compiler's row-points @ [[c,s],[-s,c]].
+        Integer products are exact in int16 (|x|,|y| < 91, |coef| < 128
+        -> |sum| < 2*91*127 < 32767), so the ONLY error source is
+        rounding cos/sin to Q7, bounded by 0.5*(|x|+|y|)/127 per
+        coordinate."""
+        scale = 127
+        c = int(np.round(np.cos(theta) * scale))
+        s = int(np.round(np.sin(theta) * scale))
+        rng = np.random.default_rng(int(abs(theta) * 100))
+        pts = rng.integers(-90, 91, (2, 8)).astype(np.int16)
+
+        emu = programs.run_rotation_points((c, s), pts).values / scale
+
+        chain = tc.TransformChain.identity(2).rotate(theta)
+        ref = np.asarray(chain.apply(
+            jnp.asarray(pts.T.astype(np.float32)), backend="ref")).T
+
+        tol = 0.5 * np.abs(pts).sum(axis=0).max() / scale + 1e-3
+        np.testing.assert_allclose(emu, ref, atol=tol)
+        # and the interpret-mode Pallas kernel ties all three together
+        pal = np.asarray(chain.apply(
+            jnp.asarray(pts.T.astype(np.float32)), backend="interpret")).T
+        np.testing.assert_allclose(emu, pal, atol=tol)
 
 
 class TestIntelModels:

@@ -26,7 +26,10 @@ def _serve_and_compare(backend, reqs, **server_kw):
     so the only permitted daylight is the fused application's last-ULP
     freedom (XLA:CPU contracts float multiply-adds per program shape):
     diagonal plans must match exactly; matrix plans to float32-epsilon
-    scale -- far inside the 2e-4 the compiler's own oracle tests allow.
+    scale -- far inside the 2e-4 the compiler's own oracle tests allow;
+    projective plans to a slightly wider relative tolerance (the
+    perspective divide amplifies the last-ULP freedom), with the cull
+    mask carried on ``Projected.mask`` matching ``chain.project``.
     """
     srv = _fresh_server(backend=backend, **server_kw)
     outs = srv.serve(reqs)
@@ -34,8 +37,16 @@ def _serve_and_compare(backend, reqs, **server_kw):
     for chain, pts in reqs:
         assert pts.dtype == np.float32
     for (chain, pts), out in zip(reqs, outs):
-        exp = chain.apply(jnp.asarray(pts), backend=backend)
         assert out.shape == pts.shape
+        if chain.is_projective:
+            exp, mexp = chain.project(jnp.asarray(pts), backend=backend)
+            assert isinstance(out, serving.Projected)
+            np.testing.assert_array_equal(np.asarray(out.mask),
+                                          np.asarray(mexp))
+            np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                       rtol=1e-5, atol=1e-5)
+            continue
+        exp = chain.apply(jnp.asarray(pts), backend=backend)
         if chain.is_diagonal:
             np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
         else:
@@ -52,6 +63,8 @@ def _serve_and_compare(backend, reqs, **server_kw):
 def test_packed_matches_per_request_mixed_workload(backend):
     rng = np.random.default_rng(11)
     reqs = workload.random_workload(rng, 48, max_points=300)
+    # the default template pool now includes projective viewing chains
+    assert any(c.is_projective for c, _ in reqs)
     srv = _serve_and_compare(backend, reqs)
     # structures x sizes bucket; every bucket saved launches vs per-request
     assert serving.stats["requests"] == 48
