@@ -13,10 +13,15 @@ rows (``autotune_serving_*``: same seeded workload served under the
 default size grid and under the tuning-cache winner, with launch counts
 and speedup as derived fields).  ``--graphics`` records the projective
 viewing-pipeline rows (``graphics_*``: fused vs staged dispatch, and the
-mixed affine+projective 64-request serving economy).  ``--out`` overrides
-the JSON path (``--out ''`` disables the record, which is what CI does to
-keep runners stateless); the default path is collision-proof -- two runs
-in the same second get distinct files, never a silent overwrite.
+mixed affine+projective 64-request serving economy).  ``--fixedpoint``
+records the int16 Qm.n lane rows (``fixedpoint_*``: fused-q vs fused-f32
+bytes and launches -- half the HBM traffic at the 64-request serving
+workload -- plus the M1 emulator-cycle parity flags).  ``--out``
+overrides the JSON path (``--out ''`` disables the record; CI instead
+writes to a scratch path, gates on it with ``tools/check_bench.py``, and
+uploads it as a workflow artifact); the default path is collision-proof
+-- two runs in the same second get distinct files, never a silent
+overwrite.
 """
 from __future__ import annotations
 
@@ -72,6 +77,10 @@ def main(argv=None) -> None:
                     help="record projective viewing-pipeline rows (fused "
                          "vs staged dispatch + mixed affine+projective "
                          "serving)")
+    ap.add_argument("--fixedpoint", action="store_true",
+                    help="record fixed-point lane rows (fused-q vs "
+                         "fused-f32 bytes/launches at the 64-request "
+                         "serving workload + M1 emulator-cycle parity)")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -82,8 +91,9 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
-    from benchmarks import (autotune_bench, graphics_bench, kernel_bench,
-                            paper_tables, roofline_bench, serving_bench)
+    from benchmarks import (autotune_bench, fixedpoint_bench, graphics_bench,
+                            kernel_bench, paper_tables, roofline_bench,
+                            serving_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -98,6 +108,9 @@ def main(argv=None) -> None:
     if args.graphics:
         print("\n== graphics (projective viewing chains, fused + served) ==")
         rows += graphics_bench.run(smoke=args.smoke)
+    if args.fixedpoint:
+        print("\n== fixed point (int16 Qm.n lane vs float32) ==")
+        rows += fixedpoint_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()
@@ -118,6 +131,10 @@ def main(argv=None) -> None:
             out = f"{base}_{k}.json"
             k += 1
     if out:
+        # CI points --out into a not-yet-existing scratch dir (ci-bench/);
+        # the record must not crash after minutes of benchmark work
+        parent = os.path.dirname(os.path.abspath(out))
+        os.makedirs(parent, exist_ok=True)
         with open(out, "w") as f:
             json.dump({"timestamp": stamp, "smoke": args.smoke,
                        "rows": _parse_rows(rows)}, f, indent=1)

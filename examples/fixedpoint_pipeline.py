@@ -1,0 +1,68 @@
+"""Fixed-point lane demo: the same composite chain on float32 and q8.7.
+
+Runs the paper's translate/scale/rotate composite over one point cloud on
+both execution lanes, showing:
+
+  * the HBM byte economy (the int16 lane moves HALF the bytes -- counted
+    by ``repro.kernels.opcount``, not asserted by prose);
+  * the per-chain quantisation error bound from ``repro.quantize`` and
+    the actual error sitting inside it;
+  * batched serving of a mixed affine workload through the
+    ``GeometryServer`` on both lanes -- same bucketing, same launch
+    count, half the bytes.
+
+    PYTHONPATH=src python examples/fixedpoint_pipeline.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import quantize, serving
+from repro.core.transform_chain import TransformChain
+from repro.kernels import opcount
+from repro.serving import workload
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    chain = (TransformChain.identity(2)
+             .translate(1.0, -2.0).scale(1.5, 0.5).rotate(0.3))
+    pts = rng.uniform(-3, 3, (4096, 2)).astype(np.float32)
+
+    with opcount.counting() as rec_f:
+        out_f = np.asarray(chain.apply(jnp.asarray(pts), backend="ref"))
+    with opcount.counting() as rec_q:
+        out_q = np.asarray(chain.apply(jnp.asarray(pts), backend="ref",
+                                       dtype="q8.7"))
+    bytes_f = opcount.total_bytes(rec_f)
+    bytes_q = opcount.total_bytes(rec_q)
+    print(f"fused composite over {len(pts)} points:")
+    print(f"  float32 lane: {bytes_f:7d} HBM bytes")
+    print(f"  q8.7 lane:    {bytes_q:7d} HBM bytes "
+          f"({bytes_q / bytes_f:.2f}x)")
+
+    folded = chain.fold()
+    bound = quantize.error_bound(folded, chain.plan_kind, "q8.7",
+                                 float(np.abs(pts).max()))
+    err = np.abs(out_q - out_f).max(axis=0)
+    assert quantize.fits(folded, chain.plan_kind, "q8.7",
+                         float(np.abs(pts).max()))
+    assert (err <= bound + np.float32(1e-5)).all(), (err, bound)
+    print(f"  max |q - f32| per coord: {err} (bound {bound})")
+
+    # batched serving: same workload, both lanes
+    reqs = workload.random_workload(seed=7, n_requests=32, max_points=256,
+                                    templates=workload.AFFINE_TEMPLATES)
+    for qformat in (None, "q8.7"):
+        srv = serving.GeometryServer(backend="ref")
+        serving.reset_stats()
+        with opcount.counting() as rec:
+            srv.serve(reqs, qformat=qformat)
+        nbytes = opcount.total_bytes(
+            [r for r in rec if r[0].startswith("serve_bucket")])
+        lane = qformat or "float32"
+        print(f"served 32 requests on {lane:7s}: "
+              f"{serving.stats['launches']} launches, {nbytes} HBM bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,14 +43,20 @@ DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 
 #: kernels the tuner knows how to search, and what each tunes:
 #:   chain_diag / chain_apply / chain_project -- block rows + lane width
+#:   chain_diag_q / chain_apply_q       -- same knobs, int16 Qm.n lane
+#:                                         (cached under the format name
+#:                                         as the dtype, e.g. "q8.7")
 #:   chain_diag_batch / chain_apply_batch / chain_project_batch
+#:   chain_diag_batch_q / chain_apply_batch_q
 #:                                      -- batch-axis block rows
 #:   matmul                             -- (bm, bn, bk) MXU tile
 #:   rmsnorm                            -- block rows
 #:   serving_grid                       -- size-bucket grid floor + waste cap
 TUNABLE_KERNELS = ("chain_diag", "chain_apply", "chain_project",
+                   "chain_diag_q", "chain_apply_q",
                    "chain_diag_batch", "chain_apply_batch",
-                   "chain_project_batch", "matmul", "rmsnorm",
+                   "chain_project_batch", "chain_diag_batch_q",
+                   "chain_apply_batch_q", "matmul", "rmsnorm",
                    "serving_grid")
 
 
@@ -94,11 +100,19 @@ DEFAULTS: dict[str, KernelConfig] = {
                                 lane_target=512),
     "chain_project": KernelConfig("chain_project", block_rows=256,
                                   lane_target=512),
+    # the fixed-point lane defaults to the float lane's launch shape:
+    # same staging maths, half the bytes per lane
+    "chain_diag_q": KernelConfig("chain_diag_q", block_rows=256,
+                                 lane_target=512),
+    "chain_apply_q": KernelConfig("chain_apply_q", block_rows=256,
+                                  lane_target=512),
     # batch kernels: block_rows=None keeps the VMEM-budget heuristic in
     # kernels.util.stage_packed
     "chain_diag_batch": KernelConfig("chain_diag_batch"),
     "chain_apply_batch": KernelConfig("chain_apply_batch"),
     "chain_project_batch": KernelConfig("chain_project_batch"),
+    "chain_diag_batch_q": KernelConfig("chain_diag_batch_q"),
+    "chain_apply_batch_q": KernelConfig("chain_apply_batch_q"),
     "matmul": KernelConfig("matmul", bm=128, bn=128, bk=512),
     "rmsnorm": KernelConfig("rmsnorm", block_rows=256),
     "serving_grid": KernelConfig("serving_grid", grid_min_len=8,

@@ -80,10 +80,26 @@ def _cdiv(a: int, b: int) -> int:
 
 # -- chain kernels (the paper's one-pass composite) ---------------------------
 
-#: plan kind -> (single-chain kernel, batched kernel)
+#: plan kind -> (single-chain kernel, batched kernel).  The ``_q`` kinds
+#: are the int16 fixed-point lane: same staging maths, 2-byte words.
 _CHAIN_KERNELS = {"diag": ("chain_diag", "chain_diag_batch"),
                   "matrix": ("chain_apply", "chain_apply_batch"),
-                  "projective": ("chain_project", "chain_project_batch")}
+                  "projective": ("chain_project", "chain_project_batch"),
+                  "diag_q": ("chain_diag_q", "chain_diag_batch_q"),
+                  "matrix_q": ("chain_apply_q", "chain_apply_batch_q")}
+
+
+def _base_kind(kind: str) -> str:
+    """The plan-kind lattice rung of a (possibly fixed-point) cost kind:
+    byte passes and parameter-word counts come from the ONE ``opcount``
+    table keyed by the base kind; the ``_q`` suffix only halves the word
+    size."""
+    return kind[:-2] if kind.endswith("_q") else kind
+
+
+def _kind_itemsize(kind: str, itemsize: int | None) -> int:
+    return itemsize if itemsize is not None else \
+        (2 if kind.endswith("_q") else 4)
 
 
 def chain_param_bytes(d: int, kind: str, itemsize: int = 4) -> int:
@@ -93,13 +109,15 @@ def chain_param_bytes(d: int, kind: str, itemsize: int = 4) -> int:
     table in ``opcount`` that ``TransformChain.apply`` and the serving
     engine also record from."""
     from repro.kernels import opcount          # late: keep imports one-way
-    return opcount.chain_param_words(d, kind) * itemsize
+    return opcount.chain_param_words(d, _base_kind(kind)) * itemsize
 
 
 def _chain_flops_per_point(d: int, kind: str) -> int:
     """VPU work per point: one MAC for diag lanes, 2d-1 rolled MACs for
     matrix lanes, and for projective lanes a second MAC set (the
-    homogeneous w), the divide, and the cull compares."""
+    homogeneous w), the divide, and the cull compares.  The fixed-point
+    kinds run the same MAC schedule (in int32)."""
+    kind = _base_kind(kind)
     if kind == "diag":
         return 2 * d
     if kind == "matrix":
@@ -109,20 +127,23 @@ def _chain_flops_per_point(d: int, kind: str) -> int:
 
 def _chain_passes(kind: str) -> int:
     from repro.kernels import opcount          # late: keep imports one-way
-    return opcount.chain_passes(kind)
+    return opcount.chain_passes(_base_kind(kind))
 
 
 def chain_cost(n_points: int, d: int, kind: str,
                config: KernelConfig | None = None, *,
-               itemsize: int = 4) -> CostEstimate:
+               itemsize: int | None = None) -> CostEstimate:
     """One fused single-chain launch over (N, d) points: the point buffer
     moves once in, once out (plus the mask pass for projective plans),
-    plus the O(1) composed parameters."""
-    from repro.kernels import util             # late: keep imports one-way
+    plus the O(1) composed parameters.  ``itemsize`` defaults by kind: 4
+    bytes on the float kinds, 2 on the ``_q`` (int16 Qm.n) kinds -- the
+    halved-byte prediction the fixed-point benchmark validates."""
+    from repro.kernels import opcount, util  # late: keep imports one-way
     kernel = _CHAIN_KERNELS[kind][0]
+    itemsize = _kind_itemsize(kind, itemsize)
     cfg = _cfg(kernel, config)
-    payload = _chain_passes(kind) * n_points * d * itemsize
-    nbytes = payload + chain_param_bytes(d, kind, itemsize)
+    nbytes = opcount.fused_chain_bytes(n_points, d, itemsize=itemsize,
+                                       kind=_base_kind(kind))
     # lane layout: w lanes per row, block_rows rows per grid step -- the
     # same staging math the kernels run (kernels.util is the one source)
     w = util.chain_width(d, target=cfg.lane_target or 512)
@@ -136,14 +157,16 @@ def chain_cost(n_points: int, d: int, kind: str,
 
 def packed_chain_cost(bsz: int, lpad: int, d: int, kind: str,
                       config: KernelConfig | None = None, *,
-                      itemsize: int = 4) -> CostEstimate:
+                      itemsize: int | None = None) -> CostEstimate:
     """One packed-bucket launch (B requests padded to L points): the same
-    byte count ``opcount.packed_chain_bytes`` records per serving launch."""
+    byte count ``opcount.packed_chain_bytes`` records per serving launch.
+    ``itemsize`` defaults by kind (2-byte words on the ``_q`` kinds)."""
     from repro.kernels import opcount, util  # late: keep imports one-way
     kernel = _CHAIN_KERNELS[kind][1]
+    itemsize = _kind_itemsize(kind, itemsize)
     cfg = _cfg(kernel, config)
     nbytes = opcount.packed_chain_bytes(bsz, lpad, d, itemsize=itemsize,
-                                        kind=kind)
+                                        kind=_base_kind(kind))
     g = util.lane_group(d)
     wr = max(1, _cdiv(lpad * d, g)) * g
     bm = cfg.block_rows or util.packed_budget_rows(wr, itemsize)

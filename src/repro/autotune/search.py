@@ -71,10 +71,12 @@ def grid_candidates() -> list[KernelConfig]:
 
 
 def candidates_for(kernel: str) -> list[KernelConfig]:
-    if kernel in ("chain_diag", "chain_apply", "chain_project"):
+    if kernel in ("chain_diag", "chain_apply", "chain_project",
+                  "chain_diag_q", "chain_apply_q"):
         return chain_candidates(kernel)
     if kernel in ("chain_diag_batch", "chain_apply_batch",
-                  "chain_project_batch"):
+                  "chain_project_batch", "chain_diag_batch_q",
+                  "chain_apply_batch_q"):
         return chain_batch_candidates(kernel)
     if kernel == "matmul":
         return matmul_candidates()
@@ -177,10 +179,15 @@ def tune_chain(kernel: str, backend: str, *, n_points: int, d: int = 2,
                measure: typing.Callable[[KernelConfig], float] | None = None,
                keep: int = 4, iters: int = 3) -> TuneReport:
     """Tune a single-chain kernel (``chain_diag`` / ``chain_apply`` /
-    ``chain_project``) at one (points, dim) shape through the public op
-    entry."""
+    ``chain_project`` or their ``_q`` fixed-point twins) at one
+    (points, dim) shape through the public op entry.  Fixed-point kernels
+    cache under the Qm.n format name as the dtype (pass e.g.
+    ``dtype="q8.7"``); their timing inputs are the float inputs quantised
+    through ``repro.quantize``, so the tuner measures the lane it
+    ships."""
     kind = {"chain_diag": "diag", "chain_apply": "matrix",
-            "chain_project": "projective"}[kernel]
+            "chain_project": "projective", "chain_diag_q": "diag_q",
+            "chain_apply_q": "matrix_q"}[kernel]
     candidates = [] if _ref_ignores_launch_knobs(kernel, backend, measure) \
         else candidates_for(kernel)
     if measure is None:
@@ -189,7 +196,21 @@ def tune_chain(kernel: str, backend: str, *, n_points: int, d: int = 2,
         from repro import kernels
         rng = np.random.default_rng(0)
         pts = jnp.asarray(rng.standard_normal((n_points, d)), jnp.float32)
-        if kind == "diag":
+        if kind in ("diag_q", "matrix_q"):
+            from repro import quantize
+            fmt = quantize.as_qformat(dtype)
+            pq = jnp.asarray(fmt.quantize(np.asarray(pts)))
+            if kind == "diag_q":
+                s = jnp.asarray(fmt.quantize(rng.uniform(0.5, 2.0, d)))
+                t = jnp.asarray(fmt.quantize(rng.uniform(-1, 1, d)))
+                entry = lambda cfg: kernels.chain_diag_q(
+                    pq, s, t, n_frac=fmt.n, backend=backend, config=cfg)
+            else:
+                a = jnp.asarray(fmt.quantize(rng.standard_normal((d, d))))
+                t = jnp.asarray(fmt.quantize(rng.uniform(-1, 1, d)))
+                entry = lambda cfg: kernels.chain_apply_q(
+                    pq, a, t, n_frac=fmt.n, backend=backend, config=cfg)
+        elif kind == "diag":
             s = jnp.asarray(rng.uniform(0.5, 2.0, d), jnp.float32)
             t = jnp.asarray(rng.uniform(-1, 1, d), jnp.float32)
             entry = lambda cfg: kernels.chain_diag(
@@ -327,10 +348,11 @@ def smoke_search(backend: str = "ref", *,
                  measure: typing.Callable[[KernelConfig], float] | None = None,
                  iters: int = 3) -> tuple[TuningCache, list[TuneReport]]:
     """The pruned search CI runs: three small chain shapes (diagonal 3D,
-    general 2D, projective 3D) plus the serving grid on BOTH seeded
-    workloads (the tiny smoke mix and the benchmark-scale 64-request mix
-    -- each caches at its own size class).  Returns the populated cache
-    and the per-kernel reports."""
+    general 2D, projective 3D), the fixed-point twins of the affine two
+    (int16 q8.7 -- cached under the format name as the dtype), plus the
+    serving grid on BOTH seeded workloads (the tiny smoke mix and the
+    benchmark-scale 64-request mix -- each caches at its own size
+    class).  Returns the populated cache and the per-kernel reports."""
     cache = cache if cache is not None else TuningCache()
     reports = [
         tune_chain("chain_diag", backend, n_points=2048, d=3, cache=cache,
@@ -339,6 +361,10 @@ def smoke_search(backend: str = "ref", *,
                    measure=measure, iters=iters),
         tune_chain("chain_project", backend, n_points=2048, d=3,
                    cache=cache, measure=measure, iters=iters),
+        tune_chain("chain_diag_q", backend, n_points=2048, d=3,
+                   dtype="q8.7", cache=cache, measure=measure, iters=iters),
+        tune_chain("chain_apply_q", backend, n_points=2048, d=2,
+                   dtype="q8.7", cache=cache, measure=measure, iters=iters),
         tune_serving_grid(smoke_workload(), backend, cache=cache,
                           measure=measure, iters=max(1, iters - 1)),
         tune_serving_grid(bench_workload(), backend, cache=cache,

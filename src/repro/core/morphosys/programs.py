@@ -87,7 +87,8 @@ def translation_program(n: int) -> Program:
 
 
 def run_translation(u: np.ndarray, v: np.ndarray) -> RunResult:
-    u = np.asarray(u, np.int16); v = np.asarray(v, np.int16)
+    u = np.asarray(u, np.int16)
+    v = np.asarray(v, np.int16)
     n = u.size
     m = Machine()
     m.poke_vector(ADDR_U, u)
@@ -162,7 +163,8 @@ def matmul_program(rows: int, inner: int) -> Program:
 def run_matmul(a: np.ndarray, b: np.ndarray) -> RunResult:
     """C = A @ B with A (rows x inner, |A_ij| < 128 for the 8-bit context
     immediate field) and B (inner x 8), int16 wrap-around semantics."""
-    a = np.asarray(a, np.int16); b = np.asarray(b, np.int16)
+    a = np.asarray(a, np.int16)
+    b = np.asarray(b, np.int16)
     rows, inner = a.shape
     assert b.shape == (inner, rc.N)
     assert np.all(np.abs(a) < 128), "context immediate field is 8-bit"
@@ -202,7 +204,8 @@ def oracle_scaling(u, c):
 
 def oracle_matmul(a, b):
     with np.errstate(over="ignore"):
-        a16 = np.asarray(a, np.int16); b16 = np.asarray(b, np.int16)
+        a16 = np.asarray(a, np.int16)
+        b16 = np.asarray(b, np.int16)
         acc = np.zeros((a16.shape[0], rc.N), np.int16)
         for k in range(a16.shape[1]):
             acc = (acc + a16[:, k:k + 1] * b16[k:k + 1, :]).astype(np.int16)

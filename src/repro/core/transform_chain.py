@@ -47,6 +47,14 @@ fused plan moves 2*N*d*4 + O(1).  ``kernels.opcount`` makes this testable.
 top of this compiler: same-structure requests pack into one (B, L, d)
 batch and execute through the batched forms of the same chain kernels --
 one launch per bucket instead of one per request.
+
+Affine chains also compile to a second execution lane:
+``apply(..., dtype="q8.7")`` runs the M1-faithful int16 Qm.n fixed-point
+plan (``kernels.fixedpoint``) -- the fold is the same shared host fold,
+the folded parameters are quantised once per request
+(``repro.quantize``), and the fused kernel moves HALF the HBM bytes per
+point.  Projective chains stay float (the in-kernel divide has no
+single-shift Qm.n form) and are rejected with a ValueError.
 """
 from __future__ import annotations
 
@@ -57,9 +65,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import quantize
 from repro.autotune import cache as tuning
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import chain_diag as _k_chain_diag
+from repro.kernels.fixedpoint import chain_apply_q as _k_chain_apply_q
+from repro.kernels.fixedpoint import chain_diag_q as _k_chain_diag_q
 from repro.kernels.matmul import chain_apply as _k_chain_apply
 from repro.kernels.projective import chain_project as _k_chain_project
 
@@ -366,12 +377,47 @@ def fold_structure(structure: tuple, params) -> tuple[np.ndarray, ...]:
 class Plan:
     """A compiled chain: ``fn(folded, flat_points_2d) -> out`` (jitted),
     where ``folded`` is the host-folded (s, t) / (A, t) / (H, lo, hi)
-    tuple.  Projective plans return ``(projected, mask)``."""
+    tuple.  Projective plans return ``(projected, mask)``.  Fixed-point
+    plans (``qformat`` set) take int16 Qm.n words instead -- the folded
+    parameters quantised once per request by ``quantize.quantize_fold``
+    -- and return int16."""
     kind: str                      # "diag" | "matrix" | "projective"
     dim: int
     backend: str
     length: int                    # primitives folded into this plan
     fn: typing.Callable
+    qformat: str | None = None     # Qm.n name for fixed-point plans
+
+
+def _compile_q(structure: tuple, backend: str, qname: str) -> Plan:
+    """Compile a fixed-point plan: the same body discipline as the float
+    plans (tuning consult at trace time, one fused kernel), but lowering
+    to the int16 ``chain_*_q`` kernels with the format's fraction count
+    baked in as the requantising shift.  Only affine structures get here
+    -- ``TransformChain`` rejects projective + dtype before lookup."""
+    dim, kinds = structure
+    kind = plan_kind_of(structure)
+    fmt = quantize.as_qformat(qname)
+
+    if kind == "diag":
+        def body(folded_q, pts2):
+            stats["traces"] += 1
+            s, t = folded_q
+            cfg = tuning.config_for("chain_diag_q", backend, fmt.name,
+                                    pts2.shape[0])
+            return _k_chain_diag_q(pts2, s, t, n_frac=fmt.n,
+                                   backend=backend, config=cfg)
+    else:
+        def body(folded_q, pts2):
+            stats["traces"] += 1
+            a, t = folded_q
+            cfg = tuning.config_for("chain_apply_q", backend, fmt.name,
+                                    pts2.shape[0])
+            return _k_chain_apply_q(pts2, a, t, n_frac=fmt.n,
+                                    backend=backend, config=cfg)
+
+    return Plan(kind=kind, dim=dim, backend=backend, length=len(kinds),
+                fn=jax.jit(body), qformat=fmt.name)
 
 
 def _compile(structure: tuple, backend: str) -> Plan:
@@ -413,12 +459,14 @@ def _compile(structure: tuple, backend: str) -> Plan:
                 fn=jax.jit(body))
 
 
-def _get_plan(structure: tuple, backend: str) -> Plan:
-    key = (structure, backend)
+def _get_plan(structure: tuple, backend: str,
+              qname: str | None = None) -> Plan:
+    key = (structure, backend, qname)
     plan = _PLAN_CACHE.get(key)
     if plan is None:
         stats["compiles"] += 1
-        plan = _compile(structure, backend)
+        plan = _compile_q(structure, backend, qname) if qname is not None \
+            else _compile(structure, backend)
         _PLAN_CACHE[key] = plan
     else:
         stats["hits"] += 1
@@ -577,19 +625,49 @@ class TransformChain:
 
     # -- execution -----------------------------------------------------------
 
-    def _plan(self, backend: str | None) -> Plan:
-        return _get_plan(self.structure, dispatch.resolve(backend))
+    def _plan(self, backend: str | None, qname: str | None = None) -> Plan:
+        return _get_plan(self.structure, dispatch.resolve(backend), qname)
 
     def _record_fused(self, plan: Plan, flat: jnp.ndarray, d: int) -> None:
         # one shared table (opcount) for parameter words and HBM passes
         # per plan kind -- the same accounting costmodel.chain_cost
-        # predicts and the serving engine records per packed launch
+        # predicts and the serving engine records per packed launch.
+        # Fixed-point plans move 2-byte words throughout (the suffix keeps
+        # the lanes separately countable).
+        suffix = "_q" if plan.qformat else ""
         opcount.record(
-            f"chain_fused_{plan.kind}",
-            opcount.chain_passes(plan.kind) * flat.nbytes
-            + 4 * opcount.chain_param_words(d, plan.kind))
+            f"chain_fused_{plan.kind}{suffix}",
+            opcount.fused_chain_bytes(flat.shape[0], d, kind=plan.kind,
+                                      itemsize=flat.dtype.itemsize))
 
-    def apply(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    def _apply_q(self, points: jnp.ndarray, fmt,
+                 backend: str | None) -> jnp.ndarray:
+        """The fixed-point lane of ``apply``: fold in float (the SAME host
+        fold), quantise the folded parameters once, and run the int16
+        ``chain_*_q`` plan.  Float points are quantised in (saturating,
+        via the traced jnp quantiser -- bit-identical to the host one, no
+        device round-trip, and jit over the POINTS works) and the result
+        dequantised back to float32; int16 points are treated as
+        already-Qm.n words and come back as int16."""
+        fmt = quantize.as_qformat(fmt)
+        quantize.reject_projective(self.is_projective)
+        if _params_traced(self.params):
+            raise NotImplementedError(
+                "fixed-point chains require concrete parameters (the fold "
+                "is quantised host-side)")
+        d = points.shape[-1]
+        from_float = quantize.points_need_quantize(points.dtype)
+        pts_q = fmt.quantize_jnp(points) if from_float \
+            else jnp.asarray(points)
+        flat = pts_q.reshape(-1, d)
+        plan = self._plan(backend, fmt.name)
+        self._record_fused(plan, flat, d)
+        folded_q = quantize.quantize_fold(self.fold(), plan.kind, fmt)
+        out = plan.fn(folded_q, flat).reshape(points.shape)
+        return fmt.dequantize_jnp(out) if from_float else out
+
+    def apply(self, points: jnp.ndarray, *, backend: str | None = None,
+              dtype: str | None = None) -> jnp.ndarray:
         """Apply the folded chain to (..., d) points in one fused pass.
 
         Concrete parameters go through the cached plan (host fold, see the
@@ -597,12 +675,20 @@ class TransformChain:
         inside the caller's trace instead, so grad/jit over chain
         parameters (pose optimisation) stays differentiable (affine chains
         only).  Projective chains return the projected points; use
-        ``project`` to also get the frustum-cull mask."""
+        ``project`` to also get the frustum-cull mask.
+
+        ``dtype`` selects the execution lane: ``None`` is the float32
+        lane; a Qm.n name ("q8.7") runs the M1-faithful int16 fixed-point
+        lane -- same fold, parameters quantised once per plan, half the
+        HBM bytes per point (affine chains only; projective chains are
+        rejected)."""
         d = points.shape[-1]
         if d != self.dim:
             raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
         if not self.kinds:
             return points
+        if dtype is not None:
+            return self._apply_q(points, dtype, backend)
         flat = points.reshape(-1, d)
         if _params_traced(self.params):
             if self.is_projective:
@@ -623,14 +709,20 @@ class TransformChain:
             out = out[0]
         return out.reshape(points.shape)
 
-    def project(self, points: jnp.ndarray, *, backend: str | None = None
+    def project(self, points: jnp.ndarray, *, backend: str | None = None,
+                dtype: str | None = None
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Apply the chain and return ``(projected (..., d), inside (...,)
         bool)`` -- the perspective-divided points plus the frustum-cull
         mask, still ONE fused kernel launch (the divide, the cull test,
         and the per-point mask reduction all happen in-kernel).  Affine
         chains project trivially: same result as ``apply``, mask all
-        True."""
+        True.  ``dtype`` (the fixed-point lane) is affine-only, exactly
+        as in ``apply``: a projective chain + dtype is rejected (by the
+        delegated ``apply`` -- one intake rule, one spelling)."""
+        if dtype is not None:
+            return (self.apply(points, backend=backend, dtype=dtype),
+                    jnp.ones(points.shape[:-1], bool))
         d = points.shape[-1]
         if d != self.dim:
             raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
@@ -647,10 +739,11 @@ class TransformChain:
         out, mask = plan.fn(self.fold(), flat)
         return out.reshape(points.shape), mask.reshape(points.shape[:-1])
 
-    def apply_many(self, points: jnp.ndarray, *, backend: str | None = None) -> jnp.ndarray:
+    def apply_many(self, points: jnp.ndarray, *, backend: str | None = None,
+                   dtype: str | None = None) -> jnp.ndarray:
         """Map one compiled plan over a leading batch axis: (B, ..., d) in,
         (B, ..., d) out, still a single fused kernel launch (the batch is
         part of the flattened point buffer, not a loop of launches)."""
         if points.ndim < 3:
             raise ValueError("apply_many expects (B, ..., d) with ndim >= 3")
-        return self.apply(points, backend=backend)
+        return self.apply(points, backend=backend, dtype=dtype)

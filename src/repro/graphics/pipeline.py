@@ -32,7 +32,9 @@ def viewing_chain(dim: int = 3, *, model: TransformChain | None = None,
       * ``camera``  -- a ``Camera``; appends its look-at view affine, and
         its intrinsic projection when ``projection`` is not given;
       * ``projection`` -- an explicit (d+1, d+1) projective matrix
-        (overrides the camera intrinsics);
+        (overrides the camera intrinsics), or ``False`` to suppress the
+        camera intrinsics entirely -- with ``cull=False`` the pipeline
+        then stays AFFINE (one matrix plan, fixed-point eligible);
       * ``cull``    -- the NDC frustum cull against [-1, 1]^d (emitted as
         the chain's in-kernel mask; on by default);
       * ``viewport`` -- a ``Viewport``; appends the NDC -> screen
@@ -40,6 +42,17 @@ def viewing_chain(dim: int = 3, *, model: TransformChain | None = None,
 
     The result folds to ONE (H, lo, hi) plan: a single fused kernel
     launch however many stages were stacked.
+
+    Execution lanes: a chain with a projection or cull is *projective*
+    and runs float32 only -- ``apply``/``project`` with a fixed-point
+    ``dtype=`` reject it loudly (the in-kernel perspective divide has no
+    single-shift Qm.n form).  An AFFINE viewing chain (model + camera +
+    viewport with ``projection=None, cull=False`` -- e.g. orthographic
+    staging without a frustum test) folds to a plain matrix plan and
+    quantises like any other affine chain:
+    ``viewing_chain(..., projection=False, cull=False)
+    .apply(pts, dtype="q8.7")`` runs the M1-faithful int16 lane at half
+    the HBM bytes (see docs/architecture.md section 5).
     """
     chain = model if model is not None else TransformChain.identity(dim)
     if model is not None and model.dim != dim:
@@ -51,7 +64,7 @@ def viewing_chain(dim: int = 3, *, model: TransformChain | None = None,
         chain = chain.matrix(camera.view_matrix())
         if projection is None:
             projection = camera.projection_matrix()
-    if projection is not None:
+    if projection is not None and projection is not False:
         chain = chain.projective(np.asarray(projection, np.float32))
     if cull:
         chain = chain.cull(-1.0, 1.0)

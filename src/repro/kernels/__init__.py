@@ -20,6 +20,14 @@ take a packed (B, L, d) request batch with per-request folded parameters
 and are what ``repro.serving`` lowers a whole plan bucket to -- one
 launch per bucket.
 
+The fixed-point lane (``kernels.fixedpoint``) re-expresses the chain
+family on the M1's int16 Qm.n datapath: ``chain_diag_q`` /
+``chain_apply_q`` (+ batch forms) run int32-accumulate MACs with a
+single requantising shift over int16 point buffers -- half the HBM
+bytes per point -- and are what quantised ``TransformChain`` plans
+(``dtype="q8.7"``) and serving buckets lower to.  Projective plans have
+no fixed-point form (the in-kernel divide stays float).
+
 Every family ships ``ops.py`` (public entry, backend-dispatched) and
 ``ref.py`` (pure-jnp oracle).  See ``repro.kernels.dispatch``; HBM byte
 accounting for perf tests lives in ``repro.kernels.opcount``.
@@ -27,6 +35,8 @@ accounting for perf tests lives in ``repro.kernels.opcount``.
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import (affine, chain_diag, chain_diag_batch, scale,
                                   translate, vecadd)
+from repro.kernels.fixedpoint import (chain_apply_batch_q, chain_apply_q,
+                                      chain_diag_batch_q, chain_diag_q)
 from repro.kernels.flash_attention import attention, blockwise_attention
 from repro.kernels.matmul import chain_apply, chain_apply_batch, matmul, rotate2d
 from repro.kernels.projective import chain_project, chain_project_batch
@@ -37,7 +47,8 @@ from repro.kernels.ssd import ssd_intra
 __all__ = [
     "dispatch", "opcount", "affine", "chain_diag", "chain_diag_batch",
     "scale", "translate", "vecadd", "attention", "blockwise_attention",
-    "chain_apply", "chain_apply_batch", "chain_project",
+    "chain_apply", "chain_apply_batch", "chain_apply_batch_q",
+    "chain_apply_q", "chain_diag_batch_q", "chain_diag_q", "chain_project",
     "chain_project_batch", "matmul", "rotate2d", "rmsnorm",
     "rope", "rope_tables", "ssd_intra",
 ]

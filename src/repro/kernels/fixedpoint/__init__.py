@@ -1,0 +1,5 @@
+from repro.kernels.fixedpoint.ops import (chain_apply_batch_q, chain_apply_q,
+                                          chain_diag_batch_q, chain_diag_q)
+
+__all__ = ["chain_diag_q", "chain_apply_q", "chain_diag_batch_q",
+           "chain_apply_batch_q"]

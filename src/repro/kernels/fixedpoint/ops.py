@@ -1,0 +1,111 @@
+"""Public entries for the fixed-point chain family (Qm.n int16 lane).
+
+Mirrors the float chain entries (``kernels.chain_diag`` /
+``chain_apply`` and their batch forms) with int16 Qm.n operands and an
+explicit ``n_frac``.  All operands are already-quantised int16 words --
+quantisation happens upstream, once per folded chain, in
+``repro.quantize.quantize_fold`` (the chain compiler and the serving
+engine both call it there), so these entries never touch floats.
+Backend dispatch per ``repro.kernels.dispatch``; on ``ref`` the oracle
+is the traceable jnp twin of the numpy Q oracle (bit-identical -- the
+arithmetic is integer).  Called under jit inside compiled plans;
+chain-level byte accounting happens in ``TransformChain.apply`` and the
+serving engine (2-byte words -- the lane's whole perf case).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.autotune.cache import KernelConfig
+from repro.kernels import dispatch
+from repro.kernels.fixedpoint import fixedpoint as K
+from repro.kernels.fixedpoint import ref
+
+
+def _as_q(x, shape) -> jnp.ndarray:
+    q = jnp.asarray(x)
+    if q.dtype != jnp.int16:
+        raise TypeError(f"fixed-point operands must be int16 Qm.n words, "
+                        f"got {q.dtype} (quantise first -- see "
+                        "repro.quantize)")
+    return jnp.broadcast_to(q, shape)
+
+
+def chain_diag_q(points: jnp.ndarray, s, t, *, n_frac: int,
+                 backend: str | None = None,
+                 config: KernelConfig | None = None) -> jnp.ndarray:
+    """Folded diagonal chain q = requant(s (.) p + t) in one fused pass
+    over (..., d) int16 Qm.n points; ``s``/``t`` are (d,) int16 words,
+    ``n_frac`` the shared fraction-bit count."""
+    b = dispatch.resolve(backend)
+    d = points.shape[-1]
+    s = _as_q(s, (d,))
+    t = _as_q(t, (d,))
+    if b == "ref":
+        return ref.chain_diag_q(points, s, t, n_frac)
+    cfg = config or KernelConfig("chain_diag_q")
+    out = K.chain_diag_1d_q(points.reshape(-1), s, t, d=d, n_frac=n_frac,
+                            interpret=(b == "interpret"),
+                            block_rows=cfg.block_rows,
+                            lane_target=cfg.lane_target)
+    return out.reshape(points.shape)
+
+
+def chain_apply_q(points: jnp.ndarray, a, t, *, n_frac: int,
+                  backend: str | None = None,
+                  config: KernelConfig | None = None) -> jnp.ndarray:
+    """Folded general chain q = requant(p @ A + t) in one fused pass;
+    ``a`` (d, d) / ``t`` (d,) int16 Qm.n words."""
+    b = dispatch.resolve(backend)
+    d = points.shape[-1]
+    a = _as_q(a, (d, d))
+    t = _as_q(t, (d,))
+    if b == "ref":
+        return ref.chain_matrix_q(points, a, t, n_frac)
+    cfg = config or KernelConfig("chain_apply_q")
+    out = K.chain_matrix_1d_q(points.reshape(-1), a, t, d=d, n_frac=n_frac,
+                              interpret=(b == "interpret"),
+                              block_rows=cfg.block_rows,
+                              lane_target=cfg.lane_target)
+    return out.reshape(points.shape)
+
+
+def chain_diag_batch_q(pts3: jnp.ndarray, s, t, *, n_frac: int,
+                       backend: str | None = None,
+                       config: KernelConfig | None = None) -> jnp.ndarray:
+    """Batched folded diagonal chains on a packed int16 (B, L, d) batch;
+    ``s``/``t`` (B, d) per-request Qm.n words.  One launch per bucket, as
+    on the float lane; integer arithmetic makes the per-request results
+    bit-identical to per-request ``chain_diag_q`` on EVERY backend."""
+    bsz, _, d = pts3.shape
+    s = _as_q(s, (bsz, d))
+    t = _as_q(t, (bsz, d))
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return jax.vmap(lambda p, sb, tb: ref.chain_diag_q(p, sb, tb,
+                                                           n_frac))(
+            pts3, s, t)
+    cfg = config or KernelConfig("chain_diag_batch_q")
+    return K.chain_diag_batch_2d_q(pts3, s, t, n_frac=n_frac,
+                                   interpret=(b == "interpret"),
+                                   block_rows=cfg.block_rows)
+
+
+def chain_apply_batch_q(pts3: jnp.ndarray, a, t, *, n_frac: int,
+                        backend: str | None = None,
+                        config: KernelConfig | None = None) -> jnp.ndarray:
+    """Batched folded general chains on a packed int16 (B, L, d) batch;
+    ``a`` (B, d, d) / ``t`` (B, d) per-request Qm.n words."""
+    bsz, _, d = pts3.shape
+    a = _as_q(a, (bsz, d, d))
+    t = _as_q(t, (bsz, d))
+    b = dispatch.resolve(backend)
+    if b == "ref":
+        return jax.vmap(lambda p, ab, tb: ref.chain_matrix_q(p, ab, tb,
+                                                             n_frac))(
+            pts3, a, t)
+    cfg = config or KernelConfig("chain_apply_batch_q")
+    return K.chain_matrix_batch_2d_q(pts3, a, t, n_frac=n_frac,
+                                     interpret=(b == "interpret"),
+                                     block_rows=cfg.block_rows)

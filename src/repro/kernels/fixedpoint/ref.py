@@ -1,0 +1,89 @@
+"""Q-arithmetic oracles for the fixed-point chain kernels.
+
+Two twins of the SAME arithmetic, asserted bit-identical by
+``tests/test_fixedpoint.py``:
+
+  * ``np_chain_diag_q`` / ``np_chain_matrix_q`` -- the pure-numpy Qm.n
+    oracle: int32 multiply-accumulate, one requantising shift
+    ``(acc + 2**(n-1)) >> n``, int16 wrap.  This is the ground truth the
+    Pallas kernels are tested against, and at n = 0 it is bit-for-bit
+    the ``core.morphosys`` emulator's integer datapath (int16 wrap-around
+    is a ring homomorphism: accumulating wide and wrapping once equals
+    wrapping every step, as the M1 ALU does).
+  * ``chain_diag_q`` / ``chain_matrix_q`` -- the traceable jnp twins the
+    ``ref`` backend dispatches to (the serving engine jits its bucket
+    plans, so the ref path must trace).  Integer ops are exact and
+    order-independent, so the two twins cannot diverge.
+
+All overflow wraps mod 2**32 in the accumulator and mod 2**16 at the
+output -- everywhere, including numpy (``errstate(over="ignore")``), so
+the three execution paths (numpy, jnp ref, Pallas) share ONE semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _np_requant(acc: np.ndarray, n_frac: int) -> np.ndarray:
+    """int32 accumulator -> int16 words: round-half-up shift, then wrap."""
+    with np.errstate(over="ignore"):
+        if n_frac:
+            acc = (acc + np.int32(1 << (n_frac - 1))) >> n_frac
+    return (acc & 0xFFFF).astype(np.uint16).view(np.int16).copy()
+
+
+def np_chain_diag_q(p: np.ndarray, s: np.ndarray, t: np.ndarray,
+                    n_frac: int) -> np.ndarray:
+    """Numpy Q oracle, diagonal plan: q = requant(p*s + (t << n))."""
+    with np.errstate(over="ignore"):
+        acc = (np.asarray(p, np.int16).astype(np.int32)
+               * np.asarray(s, np.int16).astype(np.int32)
+               + (np.asarray(t, np.int16).astype(np.int32) << n_frac))
+    return _np_requant(acc, n_frac)
+
+
+def np_chain_matrix_q(p: np.ndarray, a: np.ndarray, t: np.ndarray,
+                      n_frac: int) -> np.ndarray:
+    """Numpy Q oracle, matrix plan: q = requant(p @ A + (t << n)) over
+    (..., d) int16 points; A (d, d), t (d,) int16 words."""
+    p32 = np.asarray(p, np.int16).astype(np.int32)
+    a32 = np.asarray(a, np.int16).astype(np.int32)
+    t32 = np.asarray(t, np.int16).astype(np.int32)
+    d = p32.shape[-1]
+    with np.errstate(over="ignore"):
+        cols = [
+            sum(p32[..., m] * a32[m, c] for m in range(d)) + (t32[c] << n_frac)
+            for c in range(d)
+        ]
+        acc = np.stack(cols, axis=-1).astype(np.int32)
+    return _np_requant(acc, n_frac)
+
+
+# -- traceable jnp twins (the ``ref`` dispatch target) ------------------------
+
+def _requant(acc, n_frac: int):
+    if n_frac:
+        acc = (acc + jnp.int32(1 << (n_frac - 1))) >> n_frac
+    return acc.astype(jnp.int16)
+
+
+def chain_diag_q(p, s, t, n_frac: int):
+    """jnp Q oracle, diagonal plan (bit-identical to ``np_chain_diag_q``)."""
+    acc = (jnp.asarray(p, jnp.int16).astype(jnp.int32)
+           * jnp.asarray(s, jnp.int16).astype(jnp.int32)
+           + (jnp.asarray(t, jnp.int16).astype(jnp.int32) << n_frac))
+    return _requant(acc, n_frac)
+
+
+def chain_matrix_q(p, a, t, n_frac: int):
+    """jnp Q oracle, matrix plan (bit-identical to ``np_chain_matrix_q``)."""
+    p32 = jnp.asarray(p, jnp.int16).astype(jnp.int32)
+    a32 = jnp.asarray(a, jnp.int16).astype(jnp.int32)
+    t32 = jnp.asarray(t, jnp.int16).astype(jnp.int32)
+    d = p32.shape[-1]
+    cols = [
+        sum(p32[..., m] * a32[m, c] for m in range(d)) + (t32[c] << n_frac)
+        for c in range(d)
+    ]
+    return _requant(jnp.stack(cols, axis=-1), n_frac)

@@ -58,6 +58,20 @@ def chain_passes(kind: str) -> int:
     return 3 if kind == "projective" else 2
 
 
+def fused_chain_bytes(n_points: int, d: int, *, itemsize: int = 4,
+                      kind: str = "matrix") -> int:
+    """HBM bytes moved by ONE fused single-chain launch over (N, d)
+    points (memory-bound model): the point buffer once in and once out
+    (plus the mask pass for projective plans) and the composed-parameter
+    words, at ``itemsize`` bytes per word -- 4 on the float32 lane, 2 on
+    the int16 fixed-point lane (the lane's whole perf case: the same
+    chain moves half the bytes).  The ONE formula shared by
+    ``TransformChain``'s records, the autotune cost model, and the
+    fixed-point benchmark's f32-vs-q comparison."""
+    return (chain_passes(kind) * n_points * d * itemsize
+            + chain_param_words(d, kind) * itemsize)
+
+
 def packed_chain_bytes(bsz: int, lpad: int, d: int, *, itemsize: int = 4,
                        kind: str = "matrix") -> int:
     """HBM bytes moved by one packed-batch chain launch (memory-bound model).

@@ -7,7 +7,6 @@ configs and ``reduced()`` derives the CPU smoke-test variants.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ directly.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Batch dict convention:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

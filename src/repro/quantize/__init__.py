@@ -1,0 +1,26 @@
+"""Fixed-point (Qm.n) execution lane: formats, converters, error bounds.
+
+The M1-faithful int16 lane in three layers:
+
+  * ``qformat``  -- ``QFormat`` descriptors ("q8.7"), saturating
+    float->int16 quantisers (host numpy + traced jnp twins, one rounding
+    story), and the single requantising shift;
+  * ``chains``   -- folded-chain quantisation (``quantize_fold``: the one
+    place float32 folds become Qm.n words) and the per-chain error-bound
+    model generalising the Q7 rotation bound;
+  * execution    -- ``repro.kernels.fixedpoint`` (int32-accumulate Pallas
+    kernels + the numpy Q oracle), reached through
+    ``TransformChain.apply(..., dtype="q8.7")`` and
+    ``GeometryServer.submit(..., qformat="q8.7")``.
+"""
+from repro.quantize.chains import (QUANTIZABLE_KINDS, error_bound, fits,
+                                   points_need_quantize, quantize_fold,
+                                   reject_projective)
+from repro.quantize.qformat import (Q8_7, Q15_0, QFormat, as_qformat,
+                                    is_qformat)
+
+__all__ = [
+    "QFormat", "Q8_7", "Q15_0", "as_qformat", "is_qformat",
+    "quantize_fold", "error_bound", "fits", "QUANTIZABLE_KINDS",
+    "points_need_quantize", "reject_projective",
+]

@@ -41,6 +41,15 @@ multiply-adds, so across *different batch shapes* the last ULP may differ
 -- packed results are exact on diagonal plans in practice and within 1 ULP
 on matrix plans, deterministic for a fixed bucket shape, and padded rows
 never contaminate payload rows (points are row-independent).
+
+Fixed-point serving: ``submit(..., qformat="q8.7")`` routes a request
+through the int16 Qm.n lane -- it buckets under the FORMAT (the dtype
+slot of the bucket key), packs as int16 words through the same
+``quantize.quantize_fold`` the chain compiler's q lane uses, and
+launches the ``chain_*_batch_q`` kernels.  Integer arithmetic is exact
+and order-independent, so the q lane's packed-vs-apply equality is
+BITWISE on every plan kind (``tests/test_fixedpoint.py``) -- and each
+packed launch moves 2-byte words, half the float32 HBM volume.
 """
 from __future__ import annotations
 
@@ -51,10 +60,12 @@ import typing
 import jax
 import numpy as np
 
+from repro import quantize
 from repro.autotune import cache as tuning
 from repro.core import transform_chain as tc
 from repro.distributed import sharding
-from repro.kernels import (chain_apply_batch, chain_diag_batch,
+from repro.kernels import (chain_apply_batch, chain_apply_batch_q,
+                           chain_diag_batch, chain_diag_batch_q,
                            chain_project_batch, dispatch, opcount)
 from repro.serving import bucketing
 
@@ -125,11 +136,46 @@ class BatchPlan:
     (jitted), where ``folded_batch`` stacks the bucket's host-folded
     per-request parameters -- (s (B,d), t (B,d)), (A (B,d,d), t (B,d)),
     or (H (B,d+1,d+1), lo (B,d), hi (B,d)).  Projective plans return
-    ``(projected (B,L,d), inside (B,L))``."""
+    ``(projected (B,L,d), inside (B,L))``.  Fixed-point plans
+    (``qformat`` set) take int16 Qm.n words -- each request's fold
+    quantised by ``quantize.quantize_fold`` at pack time -- and return
+    int16."""
     kind: str                      # "diag" | "matrix" | "projective"
     dim: int
     backend: str
     fn: typing.Callable
+    qformat: str | None = None     # Qm.n name for fixed-point plans
+
+
+def _compile_batch_q(structure: tuple, backend: str,
+                     qname: str) -> BatchPlan:
+    """Compile a fixed-point bucket executor: the same trace-time tuning
+    consult as the float bodies, lowering to the int16 batch kernels with
+    the format's fraction count as the requantising shift.  Projective
+    structures never get here (``submit`` rejects chain + qformat)."""
+    dim, _ = structure
+    kind = tc.plan_kind_of(structure)
+    fmt = quantize.as_qformat(qname)
+
+    if kind == "diag":
+        def body(folded, pts3):
+            stats["traces"] += 1
+            s, t = folded
+            cfg = tuning.config_for("chain_diag_batch_q", backend, fmt.name,
+                                    pts3.shape[0] * pts3.shape[1])
+            return chain_diag_batch_q(pts3, s, t, n_frac=fmt.n,
+                                      backend=backend, config=cfg)
+    else:
+        def body(folded, pts3):
+            stats["traces"] += 1
+            a, t = folded
+            cfg = tuning.config_for("chain_apply_batch_q", backend, fmt.name,
+                                    pts3.shape[0] * pts3.shape[1])
+            return chain_apply_batch_q(pts3, a, t, n_frac=fmt.n,
+                                       backend=backend, config=cfg)
+
+    return BatchPlan(kind=kind, dim=dim, backend=backend, fn=jax.jit(body),
+                     qformat=fmt.name)
 
 
 def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
@@ -169,16 +215,20 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
     return BatchPlan(kind=kind, dim=dim, backend=backend, fn=jax.jit(body))
 
 
-def get_batch_plan(structure: tuple, backend: str) -> BatchPlan:
+def get_batch_plan(structure: tuple, backend: str,
+                   qname: str | None = None) -> BatchPlan:
     """Mirrors ``transform_chain._get_plan`` deliberately: the two caches
     stay separate because they count into different stats domains (chain
     compiler vs serving engine) and compile different bodies (single
-    folded pair vs stacked batch); keep their discipline in sync."""
-    key = (structure, backend)
+    folded pair vs stacked batch); keep their discipline in sync.
+    ``qname`` selects the fixed-point lane (a distinct cached plan, as a
+    distinct dtype would be)."""
+    key = (structure, backend, qname)
     plan = _BATCH_PLANS.get(key)
     if plan is None:
         stats["plan_compiles"] += 1
-        plan = _compile_batch(structure, backend)
+        plan = _compile_batch_q(structure, backend, qname) \
+            if qname is not None else _compile_batch(structure, backend)
         _BATCH_PLANS[key] = plan
     else:
         stats["plan_hits"] += 1
@@ -193,6 +243,8 @@ class _Pending:
     chain: tc.TransformChain
     points: np.ndarray             # original-shape host copy
     n: int                         # flattened point count
+    qformat: quantize.QFormat | None = None   # fixed-point lane request
+    dequantize: bool = False       # float submitted -> float32 back
 
 
 @dataclasses.dataclass
@@ -259,25 +311,42 @@ class GeometryServer:
 
     # -- request intake ------------------------------------------------------
 
-    def submit(self, chain: tc.TransformChain, points) -> int:
+    def submit(self, chain: tc.TransformChain, points, *,
+               qformat=None) -> int:
         """Queue one request; returns its ticket.  The next flush() returns
-        results ordered by submission, one per queued request."""
+        results ordered by submission, one per queued request.
+
+        ``qformat`` (a Qm.n name like "q8.7") routes the request through
+        the fixed-point lane: it buckets under the format (not the
+        submitted dtype), packs as int16 words (float points are
+        quantised at pack time, int16 points are taken as already-Qm.n),
+        and the result comes back dequantised float32 for float
+        submissions, int16 for int16 ones.  Affine chains only --
+        projective chains are rejected here, exactly as in
+        ``TransformChain.apply``."""
         # a real copy, not a view: the queue must be immune to callers
         # mutating their buffer between submit and flush
         pts = np.array(points, copy=True)
         if pts.ndim < 1 or pts.shape[-1] != chain.dim:
             raise ValueError(f"chain is {chain.dim}D, points are "
                              f"{pts.shape}")
+        fmt = None
+        dequant = False
+        if qformat is not None:
+            fmt = quantize.as_qformat(qformat)
+            quantize.reject_projective(chain.is_projective)
+            dequant = quantize.points_need_quantize(pts.dtype)
         ticket = self._ticket
         self._ticket += 1
         self._pending.append(_Pending(ticket, chain, pts,
-                                      pts.size // chain.dim))
+                                      pts.size // chain.dim,
+                                      qformat=fmt, dequantize=dequant))
         return ticket
 
-    def serve(self, items) -> list:
+    def serve(self, items, *, qformat=None) -> list:
         """Convenience: submit an iterable of (chain, points), then flush."""
         for chain, points in items:
-            self.submit(chain, points)
+            self.submit(chain, points, qformat=qformat)
         return self.flush()
 
     @property
@@ -289,18 +358,35 @@ class GeometryServer:
     def _bucket_key(self, p: _Pending, backend: str) -> tuple:
         lpad = bucketing.padded_length(p.n, min_len=self.min_len,
                                        waste_cap=self.waste_cap)
-        return (p.chain.structure, backend, np.dtype(p.points.dtype).str,
-                lpad)
+        # fixed-point requests bucket under the FORMAT, not the submitted
+        # dtype: a float-submitted and an int16-submitted q8.7 request
+        # pack into the same int16 batch (only unpack differs)
+        dt = p.qformat.name if p.qformat is not None \
+            else np.dtype(p.points.dtype).str
+        return (p.chain.structure, backend, dt, lpad)
 
-    def _pack(self, reqs: list[_Pending], lpad: int, dim: int):
+    def _pack(self, reqs: list[_Pending], lpad: int, plan: BatchPlan):
         """Pack a bucket: (B, lpad, d) zero-padded points + the stack of
         each request's host-folded parameters (the same numpy fold
-        ``TransformChain.apply`` runs, so the folds are bit-identical)."""
-        dtype = reqs[0].points.dtype
-        packed = np.zeros((len(reqs), lpad, dim), dtype)
-        for i, r in enumerate(reqs):
-            packed[i, :r.n] = r.points.reshape(-1, dim)
-        folds = [r.chain.fold() for r in reqs]
+        ``TransformChain.apply`` runs, so the folds are bit-identical).
+        Fixed-point buckets pack int16 Qm.n words -- float submissions
+        quantise here, and each fold quantises through the same
+        ``quantize.quantize_fold`` the chain compiler's q lane uses."""
+        dim = plan.dim
+        if plan.qformat is not None:
+            fmt = quantize.as_qformat(plan.qformat)
+            packed = np.zeros((len(reqs), lpad, dim), np.int16)
+            for i, r in enumerate(reqs):
+                pts = r.points.reshape(-1, dim)
+                packed[i, :r.n] = fmt.quantize(pts) if r.dequantize else pts
+            folds = [quantize.quantize_fold(r.chain.fold(), plan.kind, fmt)
+                     for r in reqs]
+        else:
+            dtype = reqs[0].points.dtype
+            packed = np.zeros((len(reqs), lpad, dim), dtype)
+            for i, r in enumerate(reqs):
+                packed[i, :r.n] = r.points.reshape(-1, dim)
+            folds = [r.chain.fold() for r in reqs]
         stacked = tuple(np.stack(part) for part in zip(*folds))
         return stacked, packed
 
@@ -357,8 +443,10 @@ class GeometryServer:
         launches = []
         self.last_report = []
         for (structure, bk, _dt, lpad), reqs in buckets.items():
-            plan = get_batch_plan(structure, bk)
-            stacked, packed = self._pack(reqs, lpad, plan.dim)
+            qname = reqs[0].qformat.name if reqs[0].qformat is not None \
+                else None
+            plan = get_batch_plan(structure, bk, qname)
+            stacked, packed = self._pack(reqs, lpad, plan)
             chunks = self._chunks(len(reqs), lpad)
             for sl in chunks:
                 launches.append((plan, lpad,
@@ -384,8 +472,10 @@ class GeometryServer:
             else None
         for k, (plan, lpad, _st, packed, reqs) in enumerate(launches):
             dev_params, dev_points = staged
+            # the _q suffix keeps the lanes separately countable, same
+            # discipline as TransformChain._record_fused
             opcount.record(
-                f"serve_bucket_{plan.kind}",
+                f"serve_bucket_{plan.kind}{'_q' if plan.qformat else ''}",
                 opcount.packed_chain_bytes(
                     len(reqs), lpad, plan.dim,
                     itemsize=packed.dtype.itemsize, kind=plan.kind))
@@ -413,8 +503,12 @@ class GeometryServer:
                                  .reshape(r.points.shape[:-1])))
             else:
                 host = np.asarray(out)
+                fmt = quantize.as_qformat(plan.qformat) \
+                    if plan.qformat is not None else None
                 for i, r in enumerate(reqs):
-                    results[r.ticket] = np.array(
-                        host[i, :r.n].reshape(r.points.shape))
+                    res = np.array(host[i, :r.n].reshape(r.points.shape))
+                    if fmt is not None and r.dequantize:
+                        res = fmt.dequantize(res)
+                    results[r.ticket] = res
         stats["requests"] += len(pending)
         return [results[p.ticket] for p in pending]

@@ -43,6 +43,14 @@ TEMPLATES: tuple[tuple[int, str], ...] = (
     (2, "TSP"),           # 2D projective touch-up
 )
 
+#: the affine-only template subset: structures the fixed-point (Qm.n)
+#: lane can execute (projective primitives P/C have no q form).  The ONE
+#: filter -- the fixed-point benchmark, its tests, and the example all
+#: consume this, so a new projective-like template letter cannot leak
+#: unquantizable chains into any of them.
+AFFINE_TEMPLATES: tuple[tuple[int, str], ...] = tuple(
+    t for t in TEMPLATES if not set(t[1]) & {"P", "C"})
+
 
 def random_projective(rng: np.random.Generator, dim: int) -> np.ndarray:
     """A well-conditioned random (d+1, d+1) projective matrix: a gentle

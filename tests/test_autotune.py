@@ -94,7 +94,8 @@ def test_search_deterministic_winners_file(tmp_path, tuning_state):
     paths = []
     for i in (0, 1):
         cache, reports = search.smoke_search("ref", measure=_fake_measure)
-        assert len(reports) == 5       # 3 chain shapes + 2 grid scales
+        # 3 float chain shapes + 2 fixed-point twins + 2 grid scales
+        assert len(reports) == 7
         p = str(tmp_path / f"winners{i}.json")
         cache.save(p)
         paths.append(p)

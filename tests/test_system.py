@@ -1,6 +1,5 @@
 """End-to-end behaviour: training convergence, serving, data determinism."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs

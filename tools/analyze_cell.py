@@ -6,10 +6,8 @@ dot FLOPs, collective breakdown with op_names -- the 'profiler' of the
 hypothesis->change->measure loop (no real TPU, so the lowered IR is the
 profile; see system prompt / DESIGN.md)."""
 import argparse
-import collections
 import re
 
-import jax
 
 from repro import hlo_analysis as H
 from repro.launch import cells

@@ -1,0 +1,142 @@
+"""Perf-regression gate: a fresh benchmark run vs the committed BENCH json.
+
+CI runs ``benchmarks/run.py --smoke ... --out <scratch>.json`` and then
+
+    python tools/check_bench.py <scratch>.json
+
+which compares the fresh rows against the LATEST committed
+``benchmarks/BENCH_*.json`` (lexicographically last filename -- the
+timestamped naming makes that the newest).  Only DETERMINISTIC counter
+fields are compared -- launch counts, HBM-byte totals, cycle counts,
+parity/match flags, padding ratios, config labels -- and they must match
+EXACTLY: every one of them is a pure function of committed code plus
+seeded workloads, so any drift is a real behaviour change (a bucketing
+regression, a byte-accounting change, a lost fusion), not timer noise.
+Wall-clock fields (``us_per_call``, ``speedup_*``, ``elems_per_us``,
+...) are ignored.
+
+Rows are matched by name over the INTERSECTION of the two files, so a
+committed record produced with more flags than the fresh run (extra row
+groups) gates only on what the fresh run reproduced; the ``--require``
+names (and a minimum overlap) guard against the intersection silently
+collapsing to nothing.
+
+Exit status 0 = gate passed; 1 = mismatches (each printed); 2 = the
+comparison itself is invalid (no committed record, no overlap, missing
+required rows).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: derived fields that are deterministic given the committed code +
+#: seeded workloads (everything else -- wall clocks and ratios of wall
+#: clocks -- is noise and never gated on)
+DETERMINISTIC_FIELDS = frozenset({
+    "requests", "launches", "launches_saved", "buckets", "shards",
+    "cycles", "parity", "match", "model", "paper", "emulator",
+    "hbm_bytes", "hbm_passes", "points", "padding_waste",
+    "payload_points", "padded_points", "projective_requests",
+    "projective_buckets", "points_inside", "primitives_folded",
+    "byte_ratio_vs_f32", "byte_ratio_vs_staged", "config", "plan",
+    "fusion_saves", "paper_speedup", "predicted_launches_default",
+    "predicted_launches_tuned", "measured_launches_default",
+    "measured_launches_tuned", "model_launches_exact",
+})
+
+#: rows whose presence (in BOTH files) the gate insists on -- the launch
+#: economy and the fixed-point byte claim cannot quietly fall out of the
+#: comparison
+DEFAULT_REQUIRED = (
+    "chain_serving_batched_smoke",
+    "fixedpoint_serving_q8_7_smoke",
+)
+
+MIN_OVERLAP = 10
+
+
+def latest_committed(bench_dir: str) -> str | None:
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    return paths[-1] if paths else None
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {row["name"]: row for row in doc.get("rows", [])}
+
+
+def compare(fresh: dict[str, dict], committed: dict[str, dict],
+            required=DEFAULT_REQUIRED) -> tuple[list[str], list[str]]:
+    """Returns (mismatches, validity_errors)."""
+    errors = []
+    overlap = sorted(set(fresh) & set(committed))
+    if len(overlap) < MIN_OVERLAP:
+        errors.append(f"only {len(overlap)} overlapping rows (< "
+                      f"{MIN_OVERLAP}): the comparison is vacuous")
+    for name in required:
+        if name not in fresh:
+            errors.append(f"required row {name!r} missing from the fresh "
+                          "run")
+        if name not in committed:
+            errors.append(f"required row {name!r} missing from the "
+                          "committed record")
+    mismatches = []
+    for name in overlap:
+        f_row, c_row = fresh[name], committed[name]
+        for key in sorted(set(c_row) & DETERMINISTIC_FIELDS):
+            # a deterministic counter the committed row carries must also
+            # exist in the fresh row -- a renamed/dropped field must fail
+            # the gate, not silently fall out of the comparison
+            if key not in f_row:
+                mismatches.append(
+                    f"{name}: deterministic field {key!r} present in the "
+                    "committed row but missing from the fresh run")
+            elif f_row[key] != c_row[key]:
+                mismatches.append(
+                    f"{name}: {key} = {f_row[key]!r} (fresh) vs "
+                    f"{c_row[key]!r} (committed)")
+    return mismatches, errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python tools/check_bench.py")
+    ap.add_argument("fresh", help="BENCH json written by the fresh run")
+    ap.add_argument("--bench-dir",
+                    default=os.path.join(os.path.dirname(os.path.dirname(
+                        os.path.abspath(__file__))), "benchmarks"),
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--require", nargs="*", default=list(DEFAULT_REQUIRED),
+                    help="row names that must exist in both files")
+    args = ap.parse_args(argv)
+
+    committed_path = latest_committed(args.bench_dir)
+    if committed_path is None:
+        print(f"check_bench: no committed BENCH_*.json in "
+              f"{args.bench_dir}", file=sys.stderr)
+        return 2
+    fresh = load_rows(args.fresh)
+    committed = load_rows(committed_path)
+    mismatches, errors = compare(fresh, committed,
+                                 required=tuple(args.require))
+    overlap = len(set(fresh) & set(committed))
+    print(f"check_bench: {args.fresh} vs {committed_path} "
+          f"({overlap} shared rows)")
+    for e in errors:
+        print(f"  INVALID: {e}", file=sys.stderr)
+    for m in mismatches:
+        print(f"  REGRESSION: {m}", file=sys.stderr)
+    if errors:
+        return 2
+    if mismatches:
+        return 1
+    print("  deterministic counters match exactly -- gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
