@@ -1,0 +1,88 @@
+"""Chaos benchmark: the fault-tolerant serving path under seeded injection.
+
+Two row families (see benchmarks/PERF.md):
+
+  * ``chaos_soak{_smoke}`` -- one seeded ``serving.run_chaos_soak``: a
+    mixed affine + projective + fixed-point workload served with faults
+    injected into roughly a fifth of the buckets.  The wall-clock column
+    is the full soak (including per-request oracle verification); the
+    derived fields are the deterministic recovery counters the chaos CI
+    lane gates EXACTLY (tools/check_bench.py) -- ``lost=0`` and
+    ``mismatches=0`` are the headline invariants, and
+    ``recovered_rps`` reports recovered requests per second.
+  * ``chaos_fallback_overhead{_smoke}`` -- the same workload served
+    clean (no injector) vs under injection, timing the serving path
+    alone (verification off): ``overhead`` is the wall-clock multiple
+    the recovery machinery costs when faults DO occur, and
+    ``extra_launches`` counts the retry/bisection launches that paid
+    for containment.
+"""
+from __future__ import annotations
+
+from repro import serving
+from repro.serving import engine, faults, workload
+from repro.serving.workload import timed as _timed
+
+SEED = 11
+
+
+def _soak(n_requests: int, verify: bool = True) -> serving.ChaosReport:
+    return faults.run_chaos_soak(seed=SEED, n_requests=n_requests,
+                                 backend="interpret", verify=verify)
+
+
+def _serve_once(n_requests: int, injector) -> int:
+    """Serve the soak's workload once; returns launches dispatched."""
+    srv = engine.GeometryServer(backend="interpret",
+                                injector=injector,
+                                fault_config=engine.FaultConfig(
+                                    backoff_base_s=0.0))
+    base = serving.stats["launches"]
+    for chain, pts, qname in workload.mixed_lane_workload(SEED, n_requests):
+        srv.submit(chain, pts, qformat=qname)
+    srv.flush()
+    return serving.stats["launches"] - base
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    n_requests = 64
+    iters = 2 if smoke else 4
+
+    rep = _soak(n_requests)
+    counters = rep.counters()
+    derived = ";".join(f"{k}={v}" for k, v in counters.items()
+                       if k != "seed")
+    rows = [
+        f"chaos_soak{tag},{rep.elapsed_s * 1e6:.1f},"
+        f"{derived};recovered_rps={rep.recovered_rps:.1f}",
+    ]
+    print(f"[chaos] soak: {rep.requests} requests, "
+          f"{rep.launch_failures} launch failures -> {rep.resolved} "
+          f"resolved + {rep.failed_requests} typed failures, "
+          f"lost={rep.lost}, mismatches={rep.mismatches} "
+          f"({rep.retries} retries, {rep.bisections} bisections, "
+          f"{rep.backend_fallbacks} backend fallbacks)")
+
+    # fallback overhead: identical workload, clean vs injected, no oracle
+    inj = lambda: faults.FaultInjector(     # noqa: E731 -- fresh per serve
+        seed=SEED, flaky_rate=0.06, backend_rate=0.05,
+        corrupt_rate=0.05, poison_rate=0.03)
+    _serve_once(n_requests, None)           # warm plans
+    launches_clean = _serve_once(n_requests, None)
+    best_clean = min(_timed(lambda: _serve_once(n_requests, None))
+                     for _ in range(iters))
+    launches_chaos = _serve_once(n_requests, inj())
+    best_chaos = min(_timed(lambda: _serve_once(n_requests, inj()))
+                     for _ in range(iters))
+    rows.append(
+        f"chaos_fallback_overhead{tag},{best_chaos * 1e6:.1f},"
+        f"requests={n_requests};launches_clean={launches_clean};"
+        f"launches_chaos={launches_chaos};"
+        f"extra_launches={launches_chaos - launches_clean};"
+        f"overhead={best_chaos / best_clean:.2f}x")
+    print(f"[chaos] fallback overhead: clean {best_clean * 1e3:.1f} ms "
+          f"({launches_clean} launches) vs injected "
+          f"{best_chaos * 1e3:.1f} ms ({launches_chaos} launches) -> "
+          f"{best_chaos / best_clean:.2f}x")
+    return rows

@@ -16,7 +16,10 @@ viewing-pipeline rows (``graphics_*``: fused vs staged dispatch, and the
 mixed affine+projective 64-request serving economy).  ``--fixedpoint``
 records the int16 Qm.n lane rows (``fixedpoint_*``: fused-q vs fused-f32
 bytes and launches -- half the HBM traffic at the 64-request serving
-workload -- plus the M1 emulator-cycle parity flags).  ``--out``
+workload -- plus the M1 emulator-cycle parity flags).  ``--chaos``
+records the fault-tolerance rows (``chaos_*``: a seeded fault-injection
+soak whose recovery counters are exact-gated by the chaos CI lane, plus
+the recovery machinery's wall-clock overhead under faults).  ``--out``
 overrides the JSON path (``--out ''`` disables the record; CI instead
 writes to a scratch path, gates on it with ``tools/check_bench.py``, and
 uploads it as a workflow artifact); the default path is collision-proof
@@ -81,6 +84,10 @@ def main(argv=None) -> None:
                     help="record fixed-point lane rows (fused-q vs "
                          "fused-f32 bytes/launches at the 64-request "
                          "serving workload + M1 emulator-cycle parity)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="record fault-tolerance rows (seeded chaos soak "
+                         "with exact recovery counters + the recovery "
+                         "machinery's wall-clock overhead under faults)")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -91,9 +98,9 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)
-    from benchmarks import (autotune_bench, fixedpoint_bench, graphics_bench,
-                            kernel_bench, paper_tables, roofline_bench,
-                            serving_bench)
+    from benchmarks import (autotune_bench, chaos_bench, fixedpoint_bench,
+                            graphics_bench, kernel_bench, paper_tables,
+                            roofline_bench, serving_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -111,6 +118,9 @@ def main(argv=None) -> None:
     if args.fixedpoint:
         print("\n== fixed point (int16 Qm.n lane vs float32) ==")
         rows += fixedpoint_bench.run(smoke=args.smoke)
+    if args.chaos:
+        print("\n== chaos (seeded fault injection: recovery + overhead) ==")
+        rows += chaos_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

@@ -65,7 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import quantize
+from repro import errors, quantize
 from repro.autotune import cache as tuning
 from repro.kernels import dispatch, opcount
 from repro.kernels.affine import chain_diag as _k_chain_diag
@@ -681,10 +681,15 @@ class TransformChain:
         lane; a Qm.n name ("q8.7") runs the M1-faithful int16 fixed-point
         lane -- same fold, parameters quantised once per plan, half the
         HBM bytes per point (affine chains only; projective chains are
-        rejected)."""
+        rejected).
+
+        Malformed points raise the typed ``repro.errors`` taxonomy at
+        this boundary (``ShapeError`` / ``EmptyPointsError`` /
+        ``DtypeError`` -- all ``ValueError`` subclasses) instead of
+        detonating inside the fused kernel: empty point sets and float64
+        buffers used to be silently accepted here."""
+        errors.check_points(points, self.dim)
         d = points.shape[-1]
-        if d != self.dim:
-            raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
         if not self.kinds:
             return points
         if dtype is not None:
@@ -723,9 +728,8 @@ class TransformChain:
         if dtype is not None:
             return (self.apply(points, backend=backend, dtype=dtype),
                     jnp.ones(points.shape[:-1], bool))
+        errors.check_points(points, self.dim)
         d = points.shape[-1]
-        if d != self.dim:
-            raise ValueError(f"chain is {self.dim}D, points are (..., {d})")
         if not self.is_projective:
             return (self.apply(points, backend=backend),
                     jnp.ones(points.shape[:-1], bool))

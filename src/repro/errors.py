@@ -1,0 +1,119 @@
+"""Typed request-validation errors: the serving fault taxonomy's base layer.
+
+One malformed request -- NaN points, a float64 buffer, an empty point
+set, a q-format that would wrap -- used to detonate *later*, inside a
+packed bucket, where the failure poisons every co-batched request in the
+flush.  These exceptions move the failure to the intake boundary and
+give it a machine-readable shape: every class carries a stable ``code``
+(the error-taxonomy key CI counters and logs group by) and the offending
+``ticket`` (request id) when one exists, and every class subclasses
+``ValueError`` so existing ``except ValueError`` call sites keep
+working.
+
+Layering: this module depends on numpy only.  ``repro.core`` (the chain
+compiler) and ``repro.serving`` (the engine) both raise these, which is
+why they live here rather than inside either package --
+``repro.serving.errors`` re-exports the taxonomy and adds the
+serving-only members (``LaunchError``, ``InjectedFault``).
+
+See ``docs/architecture.md`` section 6 for the full fault model.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+class RequestError(ValueError):
+    """Base of the typed request-error taxonomy.
+
+    ``code`` is the stable taxonomy key ("shape", "dtype", "empty",
+    "nonfinite", "q-range", "launch"); ``ticket`` is the serving request
+    id when the error is tied to one (None at the library boundary,
+    e.g. ``TransformChain.apply``).  A ``RequestError`` is also how a
+    request *resolves* when recovery is exhausted: ``GeometryServer.
+    flush`` returns the error object in the request's result slot
+    instead of losing the co-batched requests around it.
+    """
+    code = "request"
+
+    def __init__(self, message: str, *, ticket: int | None = None):
+        self.message = message
+        self.ticket = ticket
+        prefix = f"[request {ticket}] " if ticket is not None else ""
+        super().__init__(f"{prefix}{message}")
+
+    def with_ticket(self, ticket: int) -> "RequestError":
+        """The same error re-raised with the offending request id."""
+        return type(self)(self.message, ticket=ticket)
+
+
+class ShapeError(RequestError):
+    """Points whose shape cannot mean anything for the chain: wrong last
+    dimension, or a bare scalar."""
+    code = "shape"
+
+
+class DtypeError(RequestError, TypeError):
+    """Points in a dtype the lane does not execute (float64 is rejected
+    rather than silently narrowed; the serving boundary is strict
+    float32 / int16).  Also a ``TypeError``: dtype misuse historically
+    raised that, and both spellings must keep catching it."""
+    code = "dtype"
+
+
+class EmptyPointsError(RequestError):
+    """A zero-point request: silently accepted before, now rejected at
+    the boundary (an empty launch wastes a bucket slot and an empty
+    result is indistinguishable from a lost one)."""
+    code = "empty"
+
+
+class NonFiniteError(RequestError):
+    """NaN/Inf in the submitted points, or chain parameters that fold to
+    non-finite composed values -- either would poison every co-batched
+    request's kernel launch."""
+    code = "nonfinite"
+
+
+class QRangeError(RequestError):
+    """The fixed-point error bound predicts int16 wrap-around for this
+    request's folded parameters and input range (``quantize.fits`` is
+    False).  Raised when the overflow policy is "reject"; the
+    "fallback" policy reroutes to the float32 lane instead."""
+    code = "q-range"
+
+
+class LaunchError(RequestError):
+    """A kernel launch kept failing after the full recovery ladder --
+    retries with backoff, backend degradation, and bisection down to a
+    single request.  This is the terminal per-request resolution: it
+    occupies the request's result slot so sibling requests are never
+    lost with it."""
+    code = "launch"
+
+
+def check_points(points, dim: int, *, ticket: int | None = None) -> None:
+    """The shared boundary check of ``TransformChain.apply`` and
+    ``GeometryServer.submit``: points must be (..., dim)-shaped,
+    non-empty, and not float64 (use float32 -- silently narrowing 8-byte
+    words would halve precision without the caller asking).  Works on
+    numpy arrays, jax arrays, and tracers (shape/dtype are static);
+    finiteness is the *serving* boundary's extra check
+    (``GeometryServer.submit``), not done here -- it would force a
+    device sync on the apply hot path.
+    """
+    shape = getattr(points, "shape", None)
+    if shape is None or len(shape) < 1 or shape[-1] != dim:
+        raise ShapeError(
+            f"chain is {dim}D, points are {shape}", ticket=ticket)
+    if math.prod(shape) == 0:
+        raise EmptyPointsError(
+            f"empty point set {shape}: zero-point requests are rejected at "
+            "the boundary (an empty result is indistinguishable from a "
+            "lost one)", ticket=ticket)
+    if np.dtype(getattr(points, "dtype", np.float32)) == np.float64:
+        raise DtypeError(
+            "float64 points are not executed (the lanes are float32 / "
+            "int16 Qm.n); convert with .astype(np.float32)", ticket=ticket)

@@ -13,14 +13,14 @@ The M1-faithful int16 lane in three layers:
     ``TransformChain.apply(..., dtype="q8.7")`` and
     ``GeometryServer.submit(..., qformat="q8.7")``.
 """
-from repro.quantize.chains import (QUANTIZABLE_KINDS, error_bound, fits,
-                                   points_need_quantize, quantize_fold,
-                                   reject_projective)
+from repro.quantize.chains import (QUANTIZABLE_KINDS, ensure_fits,
+                                   error_bound, fits, points_need_quantize,
+                                   quantize_fold, reject_projective)
 from repro.quantize.qformat import (Q8_7, Q15_0, QFormat, as_qformat,
                                     is_qformat)
 
 __all__ = [
     "QFormat", "Q8_7", "Q15_0", "as_qformat", "is_qformat",
-    "quantize_fold", "error_bound", "fits", "QUANTIZABLE_KINDS",
-    "points_need_quantize", "reject_projective",
+    "quantize_fold", "error_bound", "fits", "ensure_fits",
+    "QUANTIZABLE_KINDS", "points_need_quantize", "reject_projective",
 ]

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.errors import QRangeError
 from repro.quantize.qformat import QFormat, as_qformat
 
 #: plan kinds the fixed-point lane executes.  Projective plans are
@@ -133,3 +134,20 @@ def fits(folded: tuple, kind: str, fmt, x_max: float) -> bool:
     # int32 accumulator: values carry scale 2**2n pre-shift
     return bool(np.all((acc_terms + bound) * fmt.scale * fmt.scale
                        < 2.0 ** 31))
+
+
+def ensure_fits(folded: tuple, kind: str, fmt, x_max: float, *,
+                ticket: int | None = None) -> None:
+    """Raise a typed ``repro.errors.QRangeError`` when ``fits`` is False
+    -- the reject arm of the serving engine's configurable
+    reject-or-fallback wrap policy (``FaultConfig.on_q_overflow``).  The
+    M1 datapath would wrap silently past this point; the serving
+    boundary refuses to return wrapped words as if they were results."""
+    fmt = as_qformat(fmt)
+    if not fits(folded, kind, fmt, x_max):
+        raise QRangeError(
+            f"fixed-point format {fmt.name} would wrap for this chain at "
+            f"|x| <= {float(x_max):.6g} (range bound exceeds "
+            f"{fmt.hi:.6g} or the int32 accumulator): submit on the "
+            "float32 lane, pick a wider-integer format, or enable the "
+            "on_q_overflow='fallback' policy", ticket=ticket)

@@ -7,15 +7,31 @@ plan, and bucket k+1's host->device staging overlaps bucket k's compute
 (the paper's frame-buffer set-0/set-1 discipline).  See
 ``docs/architecture.md`` for the dataflow diagram and
 ``repro.serving.engine`` for the mechanics.
+
+Fault tolerance (PR 6): ``submit`` rejects malformed requests with the
+typed ``serving.errors`` taxonomy; ``flush`` contains per-bucket launch
+failures behind a retry / backend-degradation / bisection ladder so no
+request is ever silently lost; ``serving.faults`` is the seeded
+fault-injection harness (``run_chaos_soak``) the chaos CI lane gates on.
 """
+from repro.serving import errors
 from repro.serving.bucketing import padded_length, waste_fraction
-from repro.serving.engine import (BatchPlan, BucketReport, GeometryServer,
-                                  Projected, clear_plan_cache,
-                                  get_batch_plan, reset_stats, stats)
-from repro.serving.workload import chain_for, random_workload
+from repro.serving.engine import (BatchPlan, BucketReport, FaultConfig,
+                                  GeometryServer, Projected,
+                                  clear_plan_cache, get_batch_plan,
+                                  reset_stats, stats)
+from repro.serving.errors import (CorruptionError, InjectedFault, LaunchError,
+                                  RequestError, is_error)
+from repro.serving.faults import (ChaosReport, FaultInjector, malform,
+                                  run_chaos_soak)
+from repro.serving.workload import (chain_for, mixed_lane_workload,
+                                    random_workload)
 
 __all__ = [
-    "BatchPlan", "BucketReport", "GeometryServer", "Projected", "chain_for",
-    "clear_plan_cache", "get_batch_plan", "padded_length", "random_workload",
-    "reset_stats", "stats", "waste_fraction",
+    "BatchPlan", "BucketReport", "ChaosReport", "CorruptionError",
+    "FaultConfig", "FaultInjector", "GeometryServer", "InjectedFault",
+    "LaunchError", "Projected", "RequestError", "chain_for",
+    "clear_plan_cache", "errors", "get_batch_plan", "is_error", "malform",
+    "mixed_lane_workload", "padded_length", "random_workload", "reset_stats",
+    "run_chaos_soak", "stats", "waste_fraction",
 ]

@@ -50,17 +50,36 @@ launches the ``chain_*_batch_q`` kernels.  Integer arithmetic is exact
 and order-independent, so the q lane's packed-vs-apply equality is
 BITWISE on every plan kind (``tests/test_fixedpoint.py``) -- and each
 packed launch moves 2-byte words, half the float32 HBM volume.
+
+Fault tolerance (see ``docs/architecture.md`` section 6): ``submit`` is
+the validation boundary -- malformed requests (bad shape, empty set,
+float64, NaN/Inf points or folds, a q-format the error bound says would
+wrap) raise the typed ``repro.errors`` taxonomy at intake instead of
+detonating later inside a packed bucket.  ``flush`` contains failures
+per LAUNCH: a bucket whose kernel launch fails (or whose output fails
+the corruption check) never takes the other buckets down -- it walks a
+recovery ladder of (1) bounded-exponential-backoff retries, (2) backend
+degradation (``dispatch.fallback_ladder``: pallas -> interpret -> ref),
+and (3) bisection -- split the bucket in half and recover each half
+independently -- which quarantines a poison request in O(log B)
+launches instead of losing B-1 good ones.  A request whose singleton
+launch still fails resolves to a typed ``LaunchError`` in its result
+slot: every submitted request resolves to a result or a typed error,
+never silence.  Every step is counted (``stats``/``BucketReport``) so
+recovery is CI-gateable on exact numbers; ``serving.faults`` injects
+deterministic faults to drive this machinery in tests and benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 import typing
 
 import jax
 import numpy as np
 
-from repro import quantize
+from repro import errors, quantize
 from repro.autotune import cache as tuning
 from repro.core import transform_chain as tc
 from repro.distributed import sharding
@@ -68,20 +87,37 @@ from repro.kernels import (chain_apply_batch, chain_apply_batch_q,
                            chain_diag_batch, chain_diag_batch_q,
                            chain_project_batch, dispatch, opcount)
 from repro.serving import bucketing
+from repro.serving import errors as serrors
 
 #: serving statistics (observable by tests, benchmarks and the driver):
 #:   plan_compiles -- batched plans built (one per distinct structure+backend)
 #:   plan_hits     -- plans served from the cache
 #:   traces        -- jit traces of plan bodies (new (B, L) shapes retrace;
 #:                    a seen shape must not)
-#:   launches      -- batched kernel launches issued (shards included)
+#:   launches      -- batched kernel launches DISPATCHED (shards, retries and
+#:                    recovery launches included; injector-blocked attempts
+#:                    are not -- they never reached the device)
 #:   requests      -- requests served through flush()
 #:   buckets       -- plan buckets executed
 #:   shards        -- extra launches from splitting oversized buckets
 #:   payload_points / padded_points -- real vs padded points moved
+#: fault-tolerance counters (all deterministic under a seeded injector;
+#: the chaos CI lane gates on them exactly):
+#:   rejected_requests  -- submissions refused with a typed RequestError
+#:   q_fallbacks        -- q-lane requests rerouted to float32 because the
+#:                         error bound predicted int16 wrap
+#:   launch_failures    -- launch attempts that failed (injected or real)
+#:   retries            -- re-attempts of a failing launch on the same rung
+#:   backend_fallbacks  -- launches that succeeded on a degraded backend
+#:   bisections         -- failing groups split in half to isolate poison
+#:   recovered_requests -- requests that resolved OK after >= 1 failure
+#:   failed_requests    -- requests resolved to a typed LaunchError
 stats = {"plan_compiles": 0, "plan_hits": 0, "traces": 0, "launches": 0,
          "requests": 0, "buckets": 0, "shards": 0,
-         "payload_points": 0, "padded_points": 0}
+         "payload_points": 0, "padded_points": 0,
+         "rejected_requests": 0, "q_fallbacks": 0, "launch_failures": 0,
+         "retries": 0, "backend_fallbacks": 0, "bisections": 0,
+         "recovered_requests": 0, "failed_requests": 0}
 
 _BATCH_PLANS: dict[tuple, "BatchPlan"] = {}
 
@@ -237,14 +273,68 @@ def get_batch_plan(structure: tuple, backend: str,
 
 # -- the server --------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Recovery policy knobs for one ``GeometryServer``.
+
+    ``on_q_overflow`` decides what happens when ``quantize.error_bound``
+    predicts a q-lane request would wrap int16:
+
+      * ``"fallback"`` (default) -- serve the request through the float32
+        lane instead (int16 submissions come back requantised int16, so
+        the caller's contract holds); counted in ``stats["q_fallbacks"]``.
+      * ``"reject"``  -- raise ``QRangeError`` at submit.
+      * ``"wrap"``    -- legacy M1 semantics: no check, arithmetic wraps.
+    """
+    max_launch_attempts: int = 3   # per ladder rung, first attempt included
+    backoff_base_s: float = 0.002  # sleep before retry k: base * factor**k
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 0.25
+    validate_finite: bool = True   # reject NaN/Inf points/folds at submit
+    validate_outputs: bool = True  # non-finite launch output => corruption
+    on_q_overflow: str = "fallback"
+
+    def __post_init__(self):
+        if self.on_q_overflow not in ("fallback", "reject", "wrap"):
+            raise ValueError(f"on_q_overflow must be fallback|reject|wrap, "
+                             f"got {self.on_q_overflow!r}")
+        if self.max_launch_attempts < 1:
+            raise ValueError("max_launch_attempts must be >= 1")
+
+
 @dataclasses.dataclass
 class _Pending:
     ticket: int
     chain: tc.TransformChain
     points: np.ndarray             # original-shape host copy
     n: int                         # flattened point count
+    fold: tuple | None = None      # host fold, computed once at submit
     qformat: quantize.QFormat | None = None   # fixed-point lane request
     dequantize: bool = False       # float submitted -> float32 back
+    q_fallback: bool = False       # q request rerouted to the float lane
+    requant: quantize.QFormat | None = None   # int16 caller: requantise out
+
+
+class _FailedLaunch:
+    """Marker in the outs list: this launch raised instead of returning."""
+
+    def __init__(self, err: Exception):
+        self.err = err
+
+
+@dataclasses.dataclass
+class _Launch:
+    """One scheduled launch (a whole bucket, or one shard of it), with
+    everything recovery needs to re-pack and re-dispatch its requests."""
+    structure: tuple
+    qname: str | None
+    backend: str                   # the rung this flush started on
+    lpad: int
+    plan: BatchPlan
+    stacked: tuple
+    packed: np.ndarray
+    reqs: list
+    report: "BucketReport"
 
 
 @dataclasses.dataclass
@@ -254,9 +344,18 @@ class BucketReport:
     kind: str                      # plan kind: diag | matrix | projective
     lpad: int                      # padded points per request
     requests: int
-    launches: int                  # 1 unless the bucket sharded
     payload_points: int
     padded_points: int
+    launches: int = 0              # dispatched: 1 unless sharded/recovered
+    backend: str = ""              # the rung the bucket started on
+    final_backend: str = ""        # the rung its last success landed on
+    retries: int = 0
+    bisections: int = 0
+    backend_fallbacks: int = 0
+    recovered_requests: int = 0
+    failed_requests: int = 0       # resolved to a typed LaunchError
+    q_fallback_requests: int = 0   # q requests served through this float
+    #                                bucket because the bound predicted wrap
 
     @property
     def waste(self) -> float:
@@ -291,8 +390,15 @@ class GeometryServer:
     def __init__(self, *, backend: str | None = None,
                  min_len: int | None = None,
                  waste_cap: float | None = None,
-                 max_points_per_launch: int | None = None):
+                 max_points_per_launch: int | None = None,
+                 fault_config: FaultConfig | None = None,
+                 injector=None):
         self.backend = backend
+        #: recovery policy (retry/backoff/ladder/q-overflow) -- see FaultConfig
+        self.fault_config = fault_config or FaultConfig()
+        #: optional seeded fault injector (serving.faults.FaultInjector);
+        #: None in production -- the hooks below are no-ops without it
+        self.injector = injector
         # size-grid knobs: explicit args win; unset knobs come from the
         # tuning cache when autotuning is enabled, else the historical
         # defaults (bucketing.MIN_LEN / WASTE_CAP) -- see bucketing.grid_for.
@@ -323,25 +429,85 @@ class GeometryServer:
         and the result comes back dequantised float32 for float
         submissions, int16 for int16 ones.  Affine chains only --
         projective chains are rejected here, exactly as in
-        ``TransformChain.apply``."""
+        ``TransformChain.apply``.
+
+        Submit is the isolation boundary: a malformed request (bad
+        shape, empty point set, float64, NaN/Inf points or parameters, a
+        q-format the error bound predicts would wrap under
+        ``on_q_overflow="reject"``) raises a typed ``RequestError``
+        carrying this request's ticket id HERE, before the request can
+        reach a packed bucket and take its neighbours down with it."""
+        ticket = self._ticket
+        self._ticket += 1          # rejected submissions burn their id too:
+        #                            the id in a typed error is never reused
+        try:
+            p = self._validate(chain, points, qformat, ticket)
+        except errors.RequestError:
+            stats["rejected_requests"] += 1
+            raise
+        self._pending.append(p)
+        return ticket
+
+    def _validate(self, chain: tc.TransformChain, points, qformat,
+                  ticket: int) -> _Pending:
+        """Build the queue entry, raising the typed taxonomy on anything
+        the packed lane could choke on later."""
+        cfg = self.fault_config
         # a real copy, not a view: the queue must be immune to callers
         # mutating their buffer between submit and flush
         pts = np.array(points, copy=True)
-        if pts.ndim < 1 or pts.shape[-1] != chain.dim:
-            raise ValueError(f"chain is {chain.dim}D, points are "
-                             f"{pts.shape}")
+        errors.check_points(pts, chain.dim, ticket=ticket)
         fmt = None
         dequant = False
         if qformat is not None:
             fmt = quantize.as_qformat(qformat)
             quantize.reject_projective(chain.is_projective)
-            dequant = quantize.points_need_quantize(pts.dtype)
-        ticket = self._ticket
-        self._ticket += 1
-        self._pending.append(_Pending(ticket, chain, pts,
-                                      pts.size // chain.dim,
-                                      qformat=fmt, dequantize=dequant))
-        return ticket
+            try:
+                dequant = quantize.points_need_quantize(pts.dtype)
+            except TypeError as e:
+                raise errors.DtypeError(str(e), ticket=ticket) from None
+        elif np.dtype(pts.dtype) != np.float32:
+            raise errors.DtypeError(
+                f"serving float lane is float32, got {np.dtype(pts.dtype)}; "
+                f"cast before submit (or pass qformat= for int16)",
+                ticket=ticket)
+        if cfg.validate_finite and np.issubdtype(pts.dtype, np.floating) \
+                and not np.isfinite(pts).all():
+            raise errors.NonFiniteError(
+                "points contain NaN/Inf", ticket=ticket)
+        fold = None
+        if len(chain):
+            fold = chain.fold()
+            if cfg.validate_finite:
+                # projective folds legitimately carry +/-inf cull bounds
+                parts = fold[:1] if chain.is_projective else fold
+                if not all(np.isfinite(np.asarray(f)).all() for f in parts):
+                    raise errors.NonFiniteError(
+                        "chain parameters fold to NaN/Inf", ticket=ticket)
+        q_fallback = False
+        requant = None
+        if fmt is not None and fold is not None \
+                and cfg.on_q_overflow != "wrap":
+            kind = tc.plan_kind_of(chain.structure)
+            x_vals = fmt.dequantize(pts) if not dequant else pts
+            x_max = float(np.abs(x_vals).max())
+            if cfg.on_q_overflow == "reject":
+                quantize.ensure_fits(fold, kind, fmt, x_max, ticket=ticket)
+            elif not quantize.fits(fold, kind, fmt, x_max):
+                # degrade, don't wrap: reroute through the float32 lane.
+                # int16 callers still get int16 back (requantised), so the
+                # submit contract holds; only the arithmetic substrate
+                # changed -- the same trade the backend ladder makes.
+                stats["q_fallbacks"] += 1
+                q_fallback = True
+                if not dequant:
+                    pts = fmt.dequantize(pts)
+                    requant = fmt
+                fmt = None
+                dequant = False
+        return _Pending(ticket, chain, pts, pts.size // chain.dim,
+                        fold=fold, qformat=fmt, dequantize=dequant,
+                        q_fallback=q_fallback, requant=requant)
 
     def serve(self, items, *, qformat=None) -> list:
         """Convenience: submit an iterable of (chain, points), then flush."""
@@ -371,7 +537,9 @@ class GeometryServer:
         ``TransformChain.apply`` runs, so the folds are bit-identical).
         Fixed-point buckets pack int16 Qm.n words -- float submissions
         quantise here, and each fold quantises through the same
-        ``quantize.quantize_fold`` the chain compiler's q lane uses."""
+        ``quantize.quantize_fold`` the chain compiler's q lane uses.
+        Folds come precomputed from submit (``_Pending.fold``), so a
+        recovery re-pack is bit-identical to the original pack."""
         dim = plan.dim
         if plan.qformat is not None:
             fmt = quantize.as_qformat(plan.qformat)
@@ -379,14 +547,14 @@ class GeometryServer:
             for i, r in enumerate(reqs):
                 pts = r.points.reshape(-1, dim)
                 packed[i, :r.n] = fmt.quantize(pts) if r.dequantize else pts
-            folds = [quantize.quantize_fold(r.chain.fold(), plan.kind, fmt)
+            folds = [quantize.quantize_fold(r.fold, plan.kind, fmt)
                      for r in reqs]
         else:
             dtype = reqs[0].points.dtype
             packed = np.zeros((len(reqs), lpad, dim), dtype)
             for i, r in enumerate(reqs):
                 packed[i, :r.n] = r.points.reshape(-1, dim)
-            folds = [r.chain.fold() for r in reqs]
+            folds = [r.fold for r in reqs]
         stacked = tuple(np.stack(part) for part in zip(*folds))
         return stacked, packed
 
@@ -416,8 +584,57 @@ class GeometryServer:
             return (jax.device_put(stacked), jax.device_put(packed, shard))
         return (stacked, packed)
 
+    # -- fault-injection hooks (no-ops without an injector) ------------------
+
+    def _check_injected(self, reqs: list, rung_index: int,
+                        attempt: int) -> None:
+        """Raise ``InjectedFault`` when the seeded injector scheduled a
+        launch failure for this (request group, rung, attempt)."""
+        if self.injector is not None:
+            self.injector.before_launch(
+                tuple(r.ticket for r in reqs), rung_index, attempt)
+
+    def _stage_attempt(self, plan: BatchPlan, stacked, packed, reqs: list,
+                       rung_index: int, attempt: int):
+        """Staging with the corruption hook: the injector may flip words
+        in the packed operand buffer on its way to the device.  Only
+        float affine buckets are corruptible -- their outputs are
+        finite-validatable; projective guarded divides and int16 words
+        have no such invariant to check against."""
+        inj = self.injector
+        if inj is not None and plan.qformat is None \
+                and plan.kind != "projective":
+            packed = inj.corrupt_staging(
+                packed, tuple(r.ticket for r in reqs), rung_index, attempt)
+        return self._stage(stacked, packed)
+
+    def _count_launch(self, plan: BatchPlan, lpad: int, reqs: list,
+                      packed: np.ndarray, report: BucketReport) -> None:
+        """Bookkeeping for one DISPATCHED launch (called after the
+        injector gate: a blocked attempt never reached the device)."""
+        # the _q suffix keeps the lanes separately countable, same
+        # discipline as TransformChain._record_fused
+        opcount.record(
+            f"serve_bucket_{plan.kind}{'_q' if plan.qformat else ''}",
+            opcount.packed_chain_bytes(
+                len(reqs), lpad, plan.dim,
+                itemsize=packed.dtype.itemsize, kind=plan.kind))
+        stats["launches"] += 1
+        report.launches += 1
+
+    # -- flush: dispatch, unpack, recover ------------------------------------
+
     def flush(self) -> list:
-        """Execute all pending requests; results in submission order."""
+        """Execute all pending requests; results in submission order.
+
+        Failure containment: a launch that raises (at dispatch or at
+        materialisation -- jax's async dispatch can surface device errors
+        either place) or whose output fails the corruption check is set
+        aside; every OTHER launch completes normally, then the failed
+        groups walk the recovery ladder (``_recover``).  A request whose
+        recovery exhausts resolves to a typed ``LaunchError`` in its
+        result slot -- callers check with ``serving.is_error`` -- so the
+        returned list always lines up 1:1 with submissions."""
         pending, self._pending = self._pending, []
         backend = dispatch.resolve(self.backend)
         # grid lookup keyed by this flush's traffic scale (largest request
@@ -430,17 +647,13 @@ class GeometryServer:
         results: dict[int, typing.Any] = {}
         buckets: dict[tuple, list[_Pending]] = {}
         for p in pending:
-            if len(p.chain) == 0 or p.n == 0:
-                res = p.points                             # identity / empty
-                if p.chain.is_projective:                  # (only n == 0
-                    res = _projected(                      #  can be here)
-                        res, np.ones(res.shape[:-1], bool))
-                results[p.ticket] = res
-            else:
+            if len(p.chain) == 0:
+                results[p.ticket] = p.points   # identity passthrough
+            else:                              # (empty sets reject at submit)
                 buckets.setdefault(self._bucket_key(p, backend), []).append(p)
 
-        # Build the launch list: (plan, stacked, packed, reqs) per shard.
-        launches = []
+        # Build the launch list: one _Launch per shard.
+        launches: list[_Launch] = []
         self.last_report = []
         for (structure, bk, _dt, lpad), reqs in buckets.items():
             qname = reqs[0].qformat.name if reqs[0].qformat is not None \
@@ -448,67 +661,179 @@ class GeometryServer:
             plan = get_batch_plan(structure, bk, qname)
             stacked, packed = self._pack(reqs, lpad, plan)
             chunks = self._chunks(len(reqs), lpad)
-            for sl in chunks:
-                launches.append((plan, lpad,
-                                 jax.tree.map(lambda x: x[sl], stacked),
-                                 packed[sl], reqs[sl]))
             payload = sum(r.n for r in reqs)
-            self.last_report.append(BucketReport(
+            report = BucketReport(
                 structure=_structure_tag(structure), kind=plan.kind,
-                lpad=lpad, requests=len(reqs), launches=len(chunks),
-                payload_points=payload, padded_points=len(reqs) * lpad))
+                lpad=lpad, requests=len(reqs), payload_points=payload,
+                padded_points=len(reqs) * lpad, backend=bk,
+                final_backend=bk,
+                q_fallback_requests=sum(r.q_fallback for r in reqs))
+            for sl in chunks:
+                launches.append(_Launch(
+                    structure=structure, qname=qname, backend=bk, lpad=lpad,
+                    plan=plan,
+                    stacked=jax.tree.map(lambda x: x[sl], stacked),
+                    packed=packed[sl], reqs=reqs[sl], report=report))
+            self.last_report.append(report)
             stats["buckets"] += 1
             stats["shards"] += len(chunks) - 1 if len(chunks) > 1 else 0
             stats["payload_points"] += payload
             stats["padded_points"] += len(reqs) * lpad
 
-        # Double-buffered dispatch (frame-buffer set 0 / set 1): stage the
-        # first launch, then keep one launch computing (set 0) while the
-        # next launch's host->device transfer streams (set 1).  Nothing
-        # blocks until unpack -- jax's async dispatch provides the overlap;
-        # this loop just orders the work so it CAN overlap.
-        outs = []
-        staged = self._stage(launches[0][2], launches[0][3]) if launches \
-            else None
-        for k, (plan, lpad, _st, packed, reqs) in enumerate(launches):
-            dev_params, dev_points = staged
-            # the _q suffix keeps the lanes separately countable, same
-            # discipline as TransformChain._record_fused
-            opcount.record(
-                f"serve_bucket_{plan.kind}{'_q' if plan.qformat else ''}",
-                opcount.packed_chain_bytes(
-                    len(reqs), lpad, plan.dim,
-                    itemsize=packed.dtype.itemsize, kind=plan.kind))
-            outs.append(plan.fn(dev_params, dev_points))   # async: set 0
-            stats["launches"] += 1
-            if k + 1 < len(launches):
-                staged = self._stage(launches[k + 1][2],
-                                     launches[k + 1][3])   # async: set 1
+        # Phase 1 -- optimistic double-buffered dispatch (frame-buffer
+        # set 0 / set 1): stage the first launch, then keep one launch
+        # computing (set 0) while the next launch's host->device transfer
+        # streams (set 1).  Nothing blocks until unpack -- jax's async
+        # dispatch provides the overlap; this loop just orders the work so
+        # it CAN overlap.  A launch that raises is recorded and skipped,
+        # never aborting its siblings.
+        def _stage_first(L: _Launch):
+            try:
+                return self._stage_attempt(L.plan, L.stacked, L.packed,
+                                           L.reqs, 0, 0)
+            except Exception as e:       # staging failure is a launch failure
+                return _FailedLaunch(e)
 
-        # Unpack: one device->host sync per launch, then numpy slicing --
-        # per-request unpack must not become per-request dispatch again
-        # (a jax slice per request would re-pay the launch overhead the
-        # batching just removed).  Each result is a payload-sized COPY:
-        # a view would be read-only and would pin the whole padded batch
-        # buffer for as long as the caller keeps any one result.
-        # Projective launches return (points, mask); their results carry
-        # the per-point cull mask as ``Projected.mask``.
-        for (plan, lpad, _st, _pk, reqs), out in zip(launches, outs):
-            if plan.kind == "projective":
-                host, mask = np.asarray(out[0]), np.asarray(out[1])
-                for i, r in enumerate(reqs):
-                    results[r.ticket] = _projected(
-                        np.array(host[i, :r.n].reshape(r.points.shape)),
-                        np.array(mask[i, :r.n]
-                                 .reshape(r.points.shape[:-1])))
-            else:
-                host = np.asarray(out)
-                fmt = quantize.as_qformat(plan.qformat) \
-                    if plan.qformat is not None else None
-                for i, r in enumerate(reqs):
-                    res = np.array(host[i, :r.n].reshape(r.points.shape))
-                    if fmt is not None and r.dequantize:
-                        res = fmt.dequantize(res)
-                    results[r.ticket] = res
+        outs: list = []
+        staged = _stage_first(launches[0]) if launches else None
+        for k, L in enumerate(launches):
+            try:
+                if isinstance(staged, _FailedLaunch):
+                    raise staged.err
+                dev_params, dev_points = staged
+                self._check_injected(L.reqs, 0, 0)
+                self._count_launch(L.plan, L.lpad, L.reqs, L.packed, L.report)
+                outs.append(L.plan.fn(dev_params, dev_points))  # async: set 0
+            except Exception as e:
+                outs.append(_FailedLaunch(e))
+            if k + 1 < len(launches):
+                staged = _stage_first(launches[k + 1])          # async: set 1
+
+        # Phase 2 -- unpack with capture: materialisation is where async
+        # device errors (and injected corruption) actually surface, so
+        # each launch unpacks under its own try.
+        failed: list[tuple[_Launch, Exception]] = []
+        for L, out in zip(launches, outs):
+            if isinstance(out, _FailedLaunch):
+                stats["launch_failures"] += 1
+                failed.append((L, out.err))
+                continue
+            try:
+                self._unpack(L.plan, L.reqs, out, results)
+            except Exception as e:
+                stats["launch_failures"] += 1
+                failed.append((L, e))
+
+        # Phase 3 -- sequential recovery of the failed groups (the rare
+        # path; overlap no longer matters, determinism and containment do).
+        for L, err in failed:
+            self._recover(L, list(L.reqs), err, results)
+
         stats["requests"] += len(pending)
         return [results[p.ticket] for p in pending]
+
+    def _unpack(self, plan: BatchPlan, reqs: list, out,
+                results: dict) -> None:
+        """Unpack one launch: one device->host sync, then numpy slicing --
+        per-request unpack must not become per-request dispatch again (a
+        jax slice per request would re-pay the launch overhead the
+        batching just removed).  Each result is a payload-sized COPY: a
+        view would be read-only and would pin the whole padded batch
+        buffer for as long as the caller keeps any one result.
+        Projective launches return (points, mask); their results carry
+        the per-point cull mask as ``Projected.mask``."""
+        if plan.kind == "projective":
+            host, mask = np.asarray(out[0]), np.asarray(out[1])
+            for i, r in enumerate(reqs):
+                results[r.ticket] = _projected(
+                    np.array(host[i, :r.n].reshape(r.points.shape)),
+                    np.array(mask[i, :r.n]
+                             .reshape(r.points.shape[:-1])))
+            return
+        host = np.asarray(out)
+        if self.fault_config.validate_outputs and plan.qformat is None \
+                and not np.isfinite(host).all():
+            # inputs validated finite at submit, so a non-finite output
+            # means the staged buffer (or the launch) corrupted in flight;
+            # discard wholesale and let recovery re-pack from the pristine
+            # host copies
+            raise serrors.CorruptionError(
+                f"non-finite values in {plan.kind} launch output "
+                f"(B={len(reqs)})")
+        fmt = quantize.as_qformat(plan.qformat) \
+            if plan.qformat is not None else None
+        for i, r in enumerate(reqs):
+            res = np.array(host[i, :r.n].reshape(r.points.shape))
+            if fmt is not None and r.dequantize:
+                res = fmt.dequantize(res)
+            elif r.requant is not None:
+                # q->float fallback for an int16 caller: requantise so the
+                # submit contract (int16 in -> int16 out) holds
+                res = r.requant.quantize(res)
+            results[r.ticket] = res
+
+    def _recover(self, L: _Launch, reqs: list, err: Exception,
+                 results: dict, depth: int = 0) -> None:
+        """Walk the recovery ladder for one failed launch group:
+
+          1. retry the same rung, bounded exponential backoff between
+             attempts (transient faults);
+          2. degrade the backend along ``dispatch.fallback_ladder``
+             (substrate faults: each rung computes the same function);
+          3. bisect -- split the group in half and recover each half with
+             a fresh ladder (poison isolation in O(log B) launches).
+
+        A singleton that exhausts every rung resolves to a typed
+        ``LaunchError`` carrying its ticket: the request fails alone,
+        with a name, and nothing is silently dropped."""
+        cfg = self.fault_config
+        rungs = dispatch.fallback_ladder(L.backend)
+        # at depth 0 the optimistic dispatch already burned attempt 0 of
+        # rung 0; bisected halves start their ladder fresh
+        n_failures = 1 if depth == 0 else 0
+        for ri, rung in enumerate(rungs):
+            plan = L.plan if ri == 0 \
+                else get_batch_plan(L.structure, rung, L.qname)
+            start = n_failures if ri == 0 and depth == 0 else 0
+            for attempt in range(start, cfg.max_launch_attempts):
+                if n_failures:
+                    time.sleep(min(cfg.backoff_cap_s, cfg.backoff_base_s *
+                                   cfg.backoff_factor ** (n_failures - 1)))
+                if attempt > 0:
+                    stats["retries"] += 1
+                    L.report.retries += 1
+                try:
+                    stacked, packed = self._pack(reqs, L.lpad, plan)
+                    dev = self._stage_attempt(plan, stacked, packed, reqs,
+                                              ri, attempt)
+                    self._check_injected(reqs, ri, attempt)
+                    self._count_launch(plan, L.lpad, reqs, packed, L.report)
+                    out = plan.fn(*dev)
+                    self._unpack(plan, reqs, out, results)
+                except Exception as e:
+                    stats["launch_failures"] += 1
+                    err = e
+                    n_failures += 1
+                    continue
+                if ri > 0:
+                    stats["backend_fallbacks"] += 1
+                    L.report.backend_fallbacks += 1
+                    L.report.final_backend = rung
+                stats["recovered_requests"] += len(reqs)
+                L.report.recovered_requests += len(reqs)
+                return
+        if len(reqs) > 1:
+            stats["bisections"] += 1
+            L.report.bisections += 1
+            mid = len(reqs) // 2
+            self._recover(L, reqs[:mid], err, results, depth + 1)
+            self._recover(L, reqs[mid:], err, results, depth + 1)
+            return
+        r = reqs[0]
+        resolution = errors.LaunchError(
+            f"launch failed on every rung of {rungs} "
+            f"(x{cfg.max_launch_attempts} attempts each): {err}",
+            ticket=r.ticket)
+        results[r.ticket] = resolution
+        stats["failed_requests"] += 1
+        L.report.failed_requests += 1

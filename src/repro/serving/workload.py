@@ -132,3 +132,22 @@ def random_workload(rng: np.random.Generator | int | None = None,
         pts = rng.standard_normal((n, dim)).astype(np.float32)
         requests.append((chain_for(rng, dim, kinds), pts))
     return requests
+
+
+def mixed_lane_workload(seed: int, n_requests: int, *,
+                        q_fraction: float = 0.25, qformat: str = "q8.7",
+                        max_points: int = 256):
+    """``n_requests`` (chain, points, qformat-or-None) triples mixing the
+    float lane (affine + projective structures) with the fixed-point lane
+    (every ~1/q_fraction-th AFFINE request is tagged with ``qformat``) --
+    the traffic shape the fault-model soak runs, exercising all three
+    plan kinds plus both dtype lanes in one flush.  Seed-deterministic
+    end-to-end, same contract as ``random_workload``."""
+    rng = np.random.default_rng([0x50AC, seed])
+    base = random_workload(rng, n_requests, max_points=max_points)
+    out = []
+    for chain, pts in base:
+        use_q = (not chain.is_projective) and q_fraction > 0 \
+            and rng.random() < q_fraction
+        out.append((chain, pts, qformat if use_q else None))
+    return out

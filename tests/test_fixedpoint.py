@@ -428,15 +428,18 @@ class TestServingLane:
         assert nbytes == opcount.packed_chain_bytes(1, lpad, 2, itemsize=2,
                                                     kind="matrix")
 
-    def test_identity_and_empty_requests(self):
+    def test_identity_passes_and_empty_rejects(self):
+        """PR 6: the q lane shares the submit boundary -- identity
+        requests pass through, empty ones raise the typed error."""
         srv = serving.GeometryServer(backend="ref")
         pts = RNG.uniform(-1, 1, (4, 2)).astype(np.float32)
         t0 = srv.submit(tc.TransformChain.identity(2), pts, qformat="q8.7")
-        t1 = srv.submit(tc.TransformChain.identity(2).scale(2.0),
-                        np.zeros((0, 2), np.float32), qformat="q8.7")
+        with pytest.raises(serving.errors.EmptyPointsError):
+            srv.submit(tc.TransformChain.identity(2).scale(2.0),
+                       np.zeros((0, 2), np.float32), qformat="q8.7")
         res = srv.flush()
         np.testing.assert_array_equal(res[t0], pts)
-        assert res[t1].shape == (0, 2)
+        assert len(res) == 1
 
 
 # ---------------------------------------------------------------------------

@@ -533,16 +533,20 @@ def test_serving_records_projective_packed_bytes():
     assert nbytes == opcount.packed_chain_bytes(8, 64, 2, kind="projective")
 
 
-def test_empty_projective_request_passes_through():
+def test_empty_projective_request_rejected_at_submit():
+    """PR 6: an empty projective request is refused with a typed error at
+    the submit boundary instead of passing through silently (an empty
+    result is indistinguishable from a lost one)."""
     serving.reset_stats()
     serving.clear_plan_cache()
     srv = serving.GeometryServer(backend="ref")
     chain = workload.chain_for(np.random.default_rng(0), 3, "TSRP")
-    srv.submit(chain, np.zeros((0, 3), np.float32))
-    (out,) = srv.flush()
-    assert isinstance(out, serving.Projected)
-    assert out.shape == (0, 3) and out.mask.shape == (0,)
+    with pytest.raises(serving.errors.EmptyPointsError) as ei:
+        srv.submit(chain, np.zeros((0, 3), np.float32))
+    assert ei.value.ticket == 0
+    assert srv.flush() == []
     assert serving.stats["launches"] == 0
+    assert serving.stats["rejected_requests"] == 1
 
 
 # ---------------------------------------------------------------------------

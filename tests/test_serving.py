@@ -102,16 +102,22 @@ def test_padding_never_contaminates_payload():
     np.testing.assert_array_equal(outs[0], outs[1])
 
 
-def test_identity_and_empty_requests_pass_through():
+def test_identity_passes_through_and_empty_rejects():
+    """Identity chains skip the launch path entirely; empty point sets
+    are rejected AT SUBMIT with a typed, ticket-carrying error (an empty
+    result is indistinguishable from a lost one) -- PR 6 tightened what
+    used to be a silent pass-through."""
     srv = _fresh_server(backend="ref")
     pts = np.ones((4, 2), np.float32)
     srv.submit(tc.TransformChain.identity(2), pts)
-    srv.submit(workload.chain_for(np.random.default_rng(0), 2, "TS"),
-               np.zeros((0, 2), np.float32))
-    out_id, out_empty = srv.flush()
+    with pytest.raises(serving.errors.EmptyPointsError) as ei:
+        srv.submit(workload.chain_for(np.random.default_rng(0), 2, "TS"),
+                   np.zeros((0, 2), np.float32))
+    assert ei.value.ticket == 1 and ei.value.code == "empty"
+    (out_id,) = srv.flush()
     np.testing.assert_array_equal(np.asarray(out_id), pts)
-    assert out_empty.shape == (0, 2)
     assert serving.stats["launches"] == 0
+    assert serving.stats["rejected_requests"] == 1
 
 
 def test_leading_batch_shapes_roundtrip():

@@ -46,14 +46,23 @@ DETERMINISTIC_FIELDS = frozenset({
     "fusion_saves", "paper_speedup", "predicted_launches_default",
     "predicted_launches_tuned", "measured_launches_default",
     "measured_launches_tuned", "model_launches_exact",
+    # fault-tolerance counters (chaos_* rows): the seeded soak's recovery
+    # machinery is deterministic end-to-end, so every counter -- and
+    # above all lost=0 / mismatches=0 -- gates exactly
+    "malformed", "rejected_at_submit", "resolved", "failed_requests",
+    "lost", "mismatches", "faulted_buckets", "launch_failures", "retries",
+    "backend_fallbacks", "bisections", "recovered_requests", "q_fallbacks",
+    "injected_launch_faults", "injected_corruptions", "launches_clean",
+    "launches_chaos", "extra_launches",
 })
 
 #: rows whose presence (in BOTH files) the gate insists on -- the launch
-#: economy and the fixed-point byte claim cannot quietly fall out of the
-#: comparison
+#: economy, the fixed-point byte claim, and the fault-recovery counters
+#: cannot quietly fall out of the comparison
 DEFAULT_REQUIRED = (
     "chain_serving_batched_smoke",
     "fixedpoint_serving_q8_7_smoke",
+    "chaos_soak_smoke",
 )
 
 MIN_OVERLAP = 10
