@@ -19,7 +19,11 @@ bytes and launches -- half the HBM traffic at the 64-request serving
 workload -- plus the M1 emulator-cycle parity flags).  ``--chaos``
 records the fault-tolerance rows (``chaos_*``: a seeded fault-injection
 soak whose recovery counters are exact-gated by the chaos CI lane, plus
-the recovery machinery's wall-clock overhead under faults).  ``--out``
+the recovery machinery's wall-clock overhead under faults).  ``--soak``
+records the continuous-batching rows (``soak_*``: a seeded Poisson
+arrival stream driven through the async front-end on a virtual clock --
+admission, launch, and latency counters are all deterministic and
+exact-gated by the soak CI lane).  ``--out``
 overrides the JSON path (``--out ''`` disables the record; CI instead
 writes to a scratch path, gates on it with ``tools/check_bench.py``, and
 uploads it as a workflow artifact); the default path is collision-proof
@@ -88,6 +92,11 @@ def main(argv=None) -> None:
                     help="record fault-tolerance rows (seeded chaos soak "
                          "with exact recovery counters + the recovery "
                          "machinery's wall-clock overhead under faults)")
+    ap.add_argument("--soak", action="store_true",
+                    help="record continuous-batching soak rows (seeded "
+                         "Poisson arrivals through the async front-end "
+                         "on a virtual clock; deterministic admission/"
+                         "latency counters, exact-gated)")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -100,7 +109,7 @@ def main(argv=None) -> None:
     sys.path.insert(0, root)
     from benchmarks import (autotune_bench, chaos_bench, fixedpoint_bench,
                             graphics_bench, kernel_bench, paper_tables,
-                            roofline_bench, serving_bench)
+                            roofline_bench, serving_bench, soak_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -121,6 +130,9 @@ def main(argv=None) -> None:
     if args.chaos:
         print("\n== chaos (seeded fault injection: recovery + overhead) ==")
         rows += chaos_bench.run(smoke=args.smoke)
+    if args.soak:
+        print("\n== soak (Poisson arrivals through the async front-end) ==")
+        rows += soak_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

@@ -1,0 +1,185 @@
+"""Soak benchmark: the continuous-batching front-end under Poisson traffic.
+
+A batched serving engine's benchmarks so far answered "how fast is one
+flush"; the soak answers the question production actually asks: given
+requests ARRIVING on a timeline at a sustained rate, does the flush
+policy hold its batching economy, does admission control shed the right
+load, and does the zero-lost-requests invariant survive hours of traffic
+-- compressed into seconds by running the timeline on a ``VirtualClock``.
+
+Two row families (see benchmarks/PERF.md):
+
+  * ``soak_poisson{_smoke}`` -- a seeded Poisson arrival process (10^5
+    requests smoke, 10^6 full) replaying the mixed affine + projective +
+    fixed-point workload pool through ``AsyncGeometryServer`` with four
+    tenants, per-tenant token buckets tuned so rate limiting MUST fire,
+    and the deadline-times-fill flush policy deciding every launch.  The
+    wall-clock column is the host cost of driving the whole soak; the
+    derived fields are deterministic -- arrivals, tenants, admission
+    decisions, bucket compositions, launch counts, and the VIRTUAL-time
+    p50/p99 latency and sustained req/s are all pure functions of the
+    seed, so the CI gate (tools/check_bench.py) compares them EXACTLY.
+    ``lost=0`` (every admitted request resolved) is the headline.
+  * ``soak_chaos{_smoke}`` -- the same driver with the PR 6
+    ``FaultInjector`` wired into the inner engine: launches fail, degrade
+    across backends, and bisect UNDER the async path, and the gate pins
+    ``lost=0`` plus the exact recovery counters -- the proof that the
+    recovery ladder composes with continuous batching.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serving import admission as adm
+from repro.serving import engine, faults, workload
+from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
+from repro.serving.clock import VirtualClock
+
+SEED = 17
+SMOKE_REQUESTS = 100_000
+FULL_REQUESTS = 1_000_000
+#: distinct requests in the replayed pool (cycled; pool generation is
+#: seeded so the request mix is identical across runs and machines)
+POOL = 384
+
+
+def drive_soak(n_requests: int, *, backend: str = "ref",
+               rate_rps: float = 150_000.0, n_tenants: int = 4,
+               tenant_rate: float | None = 30_000.0,
+               tenant_burst: float = 64.0,
+               max_queue_depth: int = 1024,
+               slo: SLOConfig | None = None,
+               max_points: int = 48,
+               injector: faults.FaultInjector | None = None) -> dict:
+    """Drive one seeded Poisson soak; returns the deterministic counters.
+
+    The timeline is virtual: the driver alternates between the next
+    arrival and the engine's ``next_due_in`` deadline, advancing the
+    clock to whichever comes first -- exactly the event loop a real
+    deployment runs, minus the waiting.  Every random draw (arrival
+    gaps, tenant assignment, workload pool) comes from seeded
+    generators, so the returned counters are bit-stable.
+    """
+    pool = workload.mixed_lane_workload(SEED, POOL, max_points=max_points)
+    # defaults tuned so BOTH flush triggers fire (most buckets fill to
+    # target_rows inside the window; stragglers go out on the deadline)
+    # and both admission gates reject a deterministic nonzero slice:
+    # offered 150k req/s vs 4 x 30k token buckets -> rate limiting, and
+    # ~admitted_rate * mean_wait queued rows vs depth 1024 -> queue-full
+    slo = slo or SLOConfig(max_wait_s=0.02, target_rows=32)
+    server_kw: dict = {}
+    if injector is not None:
+        server_kw.update(injector=injector,
+                         fault_config=engine.FaultConfig(backoff_base_s=0.0))
+    clock = VirtualClock()
+    eng = AsyncGeometryServer(
+        backend=backend, clock=clock, slo=slo,
+        admission=adm.AdmissionConfig(max_queue_depth=max_queue_depth,
+                                      tenant_share=0.5,
+                                      tenant_rate=tenant_rate,
+                                      tenant_burst=tenant_burst),
+        **server_kw)
+    rng = np.random.default_rng([0x50AF, SEED])
+    base = {k: engine.stats[k] for k in engine.stats}
+
+    next_arrival = 0.0
+    polls = 0
+    i = 0
+    wall0 = time.perf_counter()
+    while i < n_requests:
+        nd = eng.next_due_in()
+        if nd is not None and clock.now() + nd < next_arrival:
+            clock.advance(nd)
+            eng.poll()
+            polls += 1
+            continue
+        clock.advance_to(next_arrival)
+        tenant = f"t{int(rng.integers(n_tenants))}"
+        chain, pts, qname = pool[i % POOL]
+        try:
+            # tickets are deliberately dropped: resolution is counted in
+            # the engine telemetry, and lost-request accounting below is
+            # what proves none fell through
+            eng.submit_async(chain, pts, tenant=tenant, qformat=qname)
+        except (adm.QueueFullError, adm.RateLimitError):
+            pass                      # counted by the admission controller
+        i += 1
+        next_arrival += float(rng.exponential(1.0 / rate_rps))
+    # let the flush policy retire the tail on its own deadlines (a drain
+    # would skew the latency telemetry)
+    while True:
+        nd = eng.next_due_in()
+        if nd is None:
+            break
+        clock.advance(nd)
+        eng.poll()
+        polls += 1
+    wall_s = time.perf_counter() - wall0
+
+    st = eng.stats
+    delta = {k: engine.stats[k] - base[k] for k in base}
+    assert st["queue_depth"] == 0, "soak ended with requests still queued"
+    return {
+        "requests": n_requests,
+        "admitted": st["admitted"],
+        "rate_limited": st["rate_limit_rejections"],
+        "queue_full": st["queue_full_rejections"],
+        "resolved": st["resolved"],
+        "failed": st["failed"],
+        "lost": st["admitted"] - st["resolved"] - st["failed"],
+        "launches": delta["launches"],
+        "buckets": delta["buckets"],
+        "payload_points": delta["payload_points"],
+        "padded_points": delta["padded_points"],
+        "retries": delta["retries"],
+        "backend_fallbacks": delta["backend_fallbacks"],
+        "bisections": delta["bisections"],
+        "polls": polls,
+        "p50_virtual_us": round(st["p50_latency_s"] * 1e6, 2),
+        "p99_virtual_us": round(st["p99_latency_s"] * 1e6, 2),
+        "virtual_rps": round(st["sustained_rps"], 1),
+        "virtual_span_s": round(clock.now(), 6),
+        "wall_s": wall_s,
+    }
+
+
+_GATED = ("requests", "admitted", "rate_limited", "queue_full", "resolved",
+          "failed", "lost", "launches", "buckets", "payload_points",
+          "padded_points", "retries", "backend_fallbacks", "bisections",
+          "polls", "p50_virtual_us", "p99_virtual_us", "virtual_rps")
+
+
+def _row(name: str, counters: dict) -> str:
+    derived = ";".join(f"{k}={counters[k]}" for k in _GATED)
+    return f"{name},{counters['wall_s'] * 1e6:.1f},{derived}"
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    n = SMOKE_REQUESTS if smoke else FULL_REQUESTS
+
+    c = drive_soak(n)
+    rows = [_row(f"soak_poisson{tag}", c)]
+    print(f"[soak] poisson: {c['requests']} arrivals -> {c['admitted']} "
+          f"admitted ({c['rate_limited']} rate-limited, {c['queue_full']} "
+          f"queue-full), {c['resolved']} resolved + {c['failed']} failed, "
+          f"lost={c['lost']}; {c['launches']} launches over "
+          f"{c['virtual_span_s']:.2f} virtual s "
+          f"({c['virtual_rps']:.0f} req/s, p50 {c['p50_virtual_us']:.0f} us "
+          f"/ p99 {c['p99_virtual_us']:.0f} us) in {c['wall_s']:.1f} wall s")
+
+    # chaos variant: the PR 6 injector under the async path, smaller n
+    # (the interpret-lane recovery ladder is the expensive part)
+    n_chaos = 1_500 if smoke else 12_000
+    inj = faults.FaultInjector(seed=SEED, flaky_rate=0.06, backend_rate=0.05,
+                               corrupt_rate=0.05, poison_rate=0.03)
+    cc = drive_soak(n_chaos, backend="interpret", injector=inj)
+    rows.append(_row(f"soak_chaos{tag}", cc))
+    print(f"[soak] chaos: {cc['requests']} arrivals under injection -> "
+          f"{cc['resolved']} resolved + {cc['failed']} typed failures, "
+          f"lost={cc['lost']} ({cc['retries']} retries, "
+          f"{cc['backend_fallbacks']} fallbacks, {cc['bisections']} "
+          f"bisections) in {cc['wall_s']:.1f} wall s")
+    return rows

@@ -1,0 +1,432 @@
+"""Continuous-batching async front-end over the plan-bucketed GeometryServer.
+
+The synchronous engine answers "how do N pending requests execute in the
+fewest launches"; this module answers the production question above it:
+requests ARRIVE on a timeline, and the server must decide WHEN each
+plan bucket launches -- too eager and the launch economy collapses back
+to per-request dispatch, too patient and tail latency blows through the
+SLO.  The design is the continuous-batching loop of production LLM
+servers, mapped onto this repo's substrate:
+
+  1. **Admit** -- ``submit_async`` runs the admission gates
+     (``serving.admission``: bounded queue depth, per-tenant fair share,
+     per-tenant token buckets) and then the SAME validation boundary as
+     the synchronous ``submit`` (``GeometryServer.validate`` -- one
+     ticket sequence, one taxonomy).  Admitted requests return an
+     awaitable ``Ticket`` immediately; rejected ones raise a typed
+     ``RequestError`` subclass with a stable code.
+  2. **Schedule** -- admitted entries wait in per-bucket groups (keyed
+     exactly like the engine's plan buckets: structure + backend +
+     dtype/format + padded size class).  The flush policy couples the
+     max-wait deadline to the bucket fill fraction:
+
+         due  <=>  fill >= 1  or  age >= max_wait_s * (1 - fill)
+
+     a full bucket launches immediately, an empty-ish one waits out the
+     deadline, and everything in between interpolates -- the fuller a
+     bucket, the less reason to keep its requests waiting.
+  3. **Launch** -- ``poll`` hands every due group to the inner
+     ``GeometryServer`` (deadline order: the group whose oldest request
+     has waited longest flushes first) and resolves tickets with the
+     flush results -- including typed ``LaunchError`` resolutions from
+     the PR 6 recovery ladder, which runs unchanged under this front-end
+     (the zero-lost-requests invariant is re-asserted through the async
+     path by ``tests/test_async_serving.py`` and the soak benchmark).
+
+**All timing flows through the injectable ``serving.clock.Clock``** --
+the engine never reads a wall clock.  Under a ``VirtualClock`` every
+scheduling decision, deadline expiry, latency sample, and admission
+refill is a deterministic function of the arrival script, which is what
+makes the scheduler *testable*: ``tests/test_clock.py`` pins flush
+ordering and p50/p99 values against hand-computed numbers, and the soak
+benchmark's latency telemetry sits in the exact-match CI gate.  Under
+the default ``MonotonicClock`` the same code serves real traffic.
+
+Sync/async equivalence contract (``tests/test_async_serving.py``): the
+same seeded workload submitted while the clock is frozen and then
+``drain``ed produces bitwise-identical per-ticket results and identical
+launch/byte counters to one synchronous ``flush`` -- the front-end only
+decides WHEN groups launch, never changes WHAT a launch computes, and a
+drain schedules exactly the synchronous bucket composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+from repro.kernels import dispatch
+from repro.serving import engine
+from repro.serving.admission import AdmissionConfig, AdmissionController
+from repro.serving.clock import Clock, MonotonicClock, percentile
+
+_UNSET = object()
+
+#: deadline residuals below a nanosecond snap to "due now": float64
+#: rounding in ``max_wait * (1 - fill) - age`` can leave a remainder
+#: smaller than the clock value's own ulp, which a VirtualClock advance
+#: cannot consume -- without the snap, poll/advance livelocks on it
+_DUE_EPS = 1e-9
+
+
+class Ticket:
+    """An admitted request's handle: resolves to the transformed points
+    (or a typed error object, mirroring the synchronous ``flush`` result
+    slots) when the flush policy launches its bucket.
+
+    Awaitable: ``await ticket`` inside a coroutine driven by
+    ``AsyncGeometryServer.run`` suspends until resolution.  The await
+    protocol is the plain generator one (it yields the pending ticket to
+    the driving trampoline), deliberately independent of any asyncio
+    event loop -- determinism under a ``VirtualClock`` requires the
+    engine, not a wall-clock-driven loop, to decide when time moves."""
+
+    __slots__ = ("id", "tenant", "submitted_at", "resolved_at", "_value")
+
+    def __init__(self, ticket_id: int, tenant: str, submitted_at: float):
+        self.id = ticket_id
+        self.tenant = tenant
+        self.submitted_at = submitted_at
+        self.resolved_at: float | None = None
+        self._value = _UNSET
+
+    def done(self) -> bool:
+        return self._value is not _UNSET
+
+    def result(self):
+        """The resolved value: transformed points, or the typed error
+        object the request resolved to (check with ``serving.is_error``,
+        exactly as for synchronous ``flush`` slots)."""
+        if self._value is _UNSET:
+            raise RuntimeError(
+                f"ticket {self.id} is still pending; drive the engine "
+                "(poll/drain/gather/run) before reading results")
+        return self._value
+
+    @property
+    def latency(self) -> float | None:
+        """Clock seconds from admission to resolution (None if pending)."""
+        if self.resolved_at is None:
+            return None
+        return self.resolved_at - self.submitted_at
+
+    def _resolve(self, value, now: float) -> None:
+        self._value = value
+        self.resolved_at = now
+
+    def __await__(self):
+        while not self.done():
+            yield self
+        return self._value
+
+    def __repr__(self):
+        state = "pending" if not self.done() else \
+            type(self._value).__name__
+        return (f"Ticket(id={self.id}, tenant={self.tenant!r}, "
+                f"{state})")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """The flush policy's latency/throughput trade, per engine.
+
+    ``max_wait_s`` is the scheduling-latency SLO knob: the longest any
+    admitted request may wait before its bucket launches, even alone.
+    ``target_rows`` defines a "full" bucket (the batch size the launch
+    economy is tuned for); the effective deadline of a bucket at fill
+    fraction f is ``max_wait_s * (1 - f)``, so deadline and fill are one
+    coupled policy, not two racing timers."""
+    max_wait_s: float = 0.005
+    target_rows: int = 32
+
+    def __post_init__(self):
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {self.max_wait_s}")
+        if self.target_rows < 1:
+            raise ValueError(f"target_rows must be >= 1, got "
+                             f"{self.target_rows}")
+
+
+@dataclasses.dataclass
+class _Waiting:
+    """One admitted request parked in a flush-policy group."""
+    pending: engine._Pending
+    ticket: Ticket
+    tenant: str
+    arrival: float
+
+
+@dataclasses.dataclass
+class _Group:
+    """Requests destined for one plan bucket, waiting to launch."""
+    key: tuple
+    entries: list[_Waiting] = dataclasses.field(default_factory=list)
+
+    @property
+    def oldest_arrival(self) -> float:
+        return self.entries[0].arrival   # entries append in arrival order
+
+    def due_in(self, now: float, slo: SLOConfig) -> float:
+        """Clock seconds until this group's coupled deadline fires
+        (0 = due now).  Identity groups are always due -- there is no
+        launch to amortise, so there is nothing to wait for."""
+        if self.key[0] == "identity":
+            return 0.0
+        fill = min(1.0, len(self.entries) / slo.target_rows)
+        if fill >= 1.0:
+            return 0.0
+        age = now - self.oldest_arrival
+        rem = slo.max_wait_s * (1.0 - fill) - age
+        return rem if rem > _DUE_EPS else 0.0
+
+
+class AsyncGeometryServer:
+    """Continuous-batching front-end: async submission, admission
+    control, and a clock-driven flush policy over a ``GeometryServer``.
+
+        clock = VirtualClock()            # or MonotonicClock() in prod
+        srv = AsyncGeometryServer(backend="ref", clock=clock)
+        t = srv.submit_async(chain, pts, tenant="render")
+        ...
+        srv.poll()        # launch whatever the policy says is due
+        t.result()        # after resolution
+
+    Driving: call ``poll`` from a serving loop at whatever cadence the
+    deployment has (each call launches exactly the due groups),
+    ``drain`` to launch everything (shutdown, and the sync-equivalence
+    path), ``gather(tickets)`` to drive until specific tickets resolve,
+    or ``run(*coros)`` to trampoline request-stream coroutines that
+    ``await`` tickets.  Per-request fault tolerance is inherited
+    unchanged from the inner engine: a ticket resolves to points or to a
+    typed error, never silence."""
+
+    def __init__(self, *, backend: str | None = None,
+                 clock: Clock | None = None,
+                 slo: SLOConfig | None = None,
+                 admission: AdmissionConfig | None = None,
+                 **server_kw):
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.slo = slo or SLOConfig()
+        self._server = engine.GeometryServer(backend=backend, **server_kw)
+        self._admission = AdmissionController(
+            admission or AdmissionConfig(), self.clock)
+        self._groups: dict[tuple, _Group] = {}   # insertion = first arrival
+        # telemetry (per engine; deterministic under a VirtualClock)
+        self._latencies: list[float] = []
+        self._resolved = 0
+        self._failed = 0
+        self._first_arrival: float | None = None
+        self._last_resolution: float | None = None
+        self._max_depth_seen = 0
+
+    # -- intake --------------------------------------------------------------
+
+    @property
+    def server(self) -> engine.GeometryServer:
+        """The inner synchronous engine (reports, fault config, injector)."""
+        return self._server
+
+    @property
+    def queue_depth(self) -> int:
+        return self._admission.depth
+
+    def submit_async(self, chain, points, *, tenant: str = "default",
+                     qformat=None) -> Ticket:
+        """Admit + validate one request; returns its awaitable ticket.
+
+        Gate order: admission first (backpressure must shed load BEFORE
+        paying per-request validation cost), then the shared validation
+        boundary.  Raises the typed taxonomy either way --
+        ``QueueFullError`` / ``RateLimitError`` with stable codes for
+        backpressure, the intake family for malformed payloads -- so a
+        caller's error handling is one ``except RequestError``."""
+        try:
+            self._admission.admit(tenant)    # raises typed rejection
+        except BaseException:
+            self._mirror_admission_stats()
+            raise
+        try:
+            p = self._server.validate(chain, points, qformat=qformat)
+        except BaseException:
+            # never queued: the slot (but not the spent rate token --
+            # the tenant did submit) goes back
+            self._admission.unadmit(tenant)
+            raise
+        finally:
+            self._mirror_admission_stats()
+        now = self.clock.now()
+        ticket = Ticket(p.ticket, tenant, now)
+        key = self._group_key(p)
+        group = self._groups.get(key)
+        if group is None:
+            group = self._groups[key] = _Group(key)
+        group.entries.append(_Waiting(p, ticket, tenant, now))
+        if self._first_arrival is None:
+            self._first_arrival = now
+        self._max_depth_seen = max(self._max_depth_seen, self.queue_depth)
+        engine.stats["admitted_requests"] += 1
+        return ticket
+
+    def _group_key(self, p: engine._Pending) -> tuple:
+        """The flush-policy grouping key: the engine's own bucket key,
+        so policy groups land 1:1 on plan buckets (an identity chain has
+        no bucket -- flush passes it through -- and gets its own
+        always-due group)."""
+        if len(p.chain) == 0:
+            return ("identity", p.chain.dim)
+        return self._server._bucket_key(
+            p, dispatch.resolve(self._server.backend))
+
+    def _mirror_admission_stats(self) -> None:
+        """Copy the controller's rejection counters into the module
+        ``serving.stats`` dict (absolute, not incremental: the
+        controller owns the truth)."""
+        engine.stats["queue_full_rejections"] = \
+            self._admission.queue_full_rejections
+        engine.stats["rate_limit_rejections"] = \
+            self._admission.rate_limit_rejections
+
+    # -- scheduling ----------------------------------------------------------
+
+    def next_due_in(self) -> float | None:
+        """Clock seconds until the earliest group deadline fires (0 =
+        something is due now; None = nothing is waiting).  ``gather``
+        and the soak driver advance a virtual clock by exactly this."""
+        if not self._groups:
+            return None
+        now = self.clock.now()
+        return min(g.due_in(now, self.slo) for g in self._groups.values())
+
+    def poll(self) -> int:
+        """Launch every group whose coupled deadline has fired, oldest
+        deadline first; returns the number of requests resolved.  One
+        inner flush serves all due groups (each is its own plan bucket,
+        so deadline order is bucket launch order)."""
+        now = self.clock.now()
+        due = [g for g in self._groups.values()
+               if g.due_in(now, self.slo) <= 0.0]
+        due.sort(key=lambda g: g.oldest_arrival)
+        return self._flush_groups(due)
+
+    def drain(self) -> int:
+        """Launch EVERYTHING waiting, deadlines notwithstanding
+        (shutdown, and the sync-equivalence path): entries are enqueued
+        in ticket order -- exactly the order one synchronous flush of
+        the same submissions would see -- so a drain reproduces the
+        synchronous bucket composition bit for bit."""
+        entries = sorted((e for g in self._groups.values()
+                          for e in g.entries),
+                         key=lambda e: e.pending.ticket)
+        self._groups.clear()
+        return self._flush_entries(entries)
+
+    def _flush_groups(self, groups: list[_Group]) -> int:
+        entries = [e for g in groups for e in g.entries]
+        for g in groups:
+            self._groups.pop(g.key, None)
+        return self._flush_entries(entries)
+
+    def _flush_entries(self, entries: list[_Waiting]) -> int:
+        if not entries:
+            return 0
+        for e in entries:
+            self._server.enqueue(e.pending)
+        results = self._server.flush()
+        done = self.clock.now()   # monotonic: includes execution time
+        for e, res in zip(entries, results):
+            e.ticket._resolve(res, done)
+            self._admission.release(e.tenant)
+            self._latencies.append(done - e.arrival)
+            if engine.serrors.is_error(res):
+                self._failed += 1
+            else:
+                self._resolved += 1
+        self._last_resolution = done
+        return len(entries)
+
+    # -- drivers -------------------------------------------------------------
+
+    def gather(self, tickets: typing.Sequence[Ticket],
+               max_steps: int = 1_000_000) -> list:
+        """Drive the engine (poll, then advance/sleep to the next
+        deadline) until every ticket resolves; returns their results in
+        order.  Deterministic under a ``VirtualClock`` -- the clock
+        jumps from deadline to deadline, never by an arbitrary tick."""
+        for _ in range(max_steps):
+            if all(t.done() for t in tickets):
+                return [t.result() for t in tickets]
+            if self.poll() == 0:
+                nd = self.next_due_in()
+                if nd is None:
+                    raise RuntimeError(
+                        "pending tickets but nothing queued: tickets from "
+                        "another engine?")
+                self.clock.sleep(nd)
+        raise RuntimeError(f"gather did not converge in {max_steps} steps")
+
+    def run(self, *coros, max_steps: int = 1_000_000) -> list:
+        """Trampoline request-stream coroutines that ``await`` tickets:
+        each round steps every live coroutine once, then -- when all of
+        them are parked on pending tickets -- polls, advancing the clock
+        to the next deadline when nothing is due.  Returns each
+        coroutine's return value, in argument order.  This is the async
+        consumption shape (``t = srv.submit_async(...); r = await t``)
+        without an asyncio loop: the ENGINE owns time, which is what
+        keeps a VirtualClock run bit-reproducible."""
+        results: list = [None] * len(coros)
+        live = {i: c for i, c in enumerate(coros)}
+        for _ in range(max_steps):
+            if not live:
+                return results
+            parked = True
+            for i, coro in list(live.items()):
+                try:
+                    waiting_on = coro.send(None)
+                except StopIteration as stop:
+                    results[i] = stop.value
+                    del live[i]
+                    parked = False
+                else:
+                    if not (isinstance(waiting_on, Ticket)
+                            and not waiting_on.done()):
+                        parked = False   # progressed past an await
+            if parked and live:
+                if self.poll() == 0:
+                    nd = self.next_due_in()
+                    if nd is None:
+                        raise RuntimeError(
+                            "coroutines parked on tickets but nothing is "
+                            "queued: awaiting tickets from another engine?")
+                    self.clock.sleep(nd)
+        raise RuntimeError(f"run did not converge in {max_steps} steps")
+
+    # -- telemetry -----------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """This engine's serving telemetry (all values deterministic
+        under a ``VirtualClock``): admission counters, queue depth,
+        nearest-rank p50/p99 scheduling latency, and sustained
+        requests/s over the clock span from first arrival to last
+        resolution.  Module-wide launch counters stay in
+        ``serving.stats``; this dict is PER ENGINE."""
+        ctrl = self._admission
+        elapsed = 0.0
+        if self._first_arrival is not None \
+                and self._last_resolution is not None:
+            elapsed = self._last_resolution - self._first_arrival
+        lat = self._latencies
+        return {
+            "admitted": ctrl.admitted,
+            "queue_full_rejections": ctrl.queue_full_rejections,
+            "rate_limit_rejections": ctrl.rate_limit_rejections,
+            "queue_depth": ctrl.depth,
+            "max_queue_depth_seen": self._max_depth_seen,
+            "waiting_groups": len(self._groups),
+            "resolved": self._resolved,
+            "failed": self._failed,
+            "p50_latency_s": percentile(lat, 50) if lat else 0.0,
+            "p99_latency_s": percentile(lat, 99) if lat else 0.0,
+            "max_latency_s": max(lat) if lat else 0.0,
+            "sustained_rps": (self._resolved + self._failed) / elapsed
+            if elapsed > 0 else 0.0,
+        }

@@ -112,17 +112,33 @@ from repro.serving import errors as serrors
 #:   bisections         -- failing groups split in half to isolate poison
 #:   recovered_requests -- requests that resolved OK after >= 1 failure
 #:   failed_requests    -- requests resolved to a typed LaunchError
+#: continuous-batching counters (incremented by serving.async_engine;
+#: always 0 on the synchronous path):
+#:   admitted_requests      -- requests past the admission gates
+#:   queue_full_rejections  -- typed QueueFullError backpressure refusals
+#:   rate_limit_rejections  -- typed RateLimitError token-bucket refusals
 stats = {"plan_compiles": 0, "plan_hits": 0, "traces": 0, "launches": 0,
          "requests": 0, "buckets": 0, "shards": 0,
          "payload_points": 0, "padded_points": 0,
          "rejected_requests": 0, "q_fallbacks": 0, "launch_failures": 0,
          "retries": 0, "backend_fallbacks": 0, "bisections": 0,
-         "recovered_requests": 0, "failed_requests": 0}
+         "recovered_requests": 0, "failed_requests": 0,
+         "admitted_requests": 0, "queue_full_rejections": 0,
+         "rate_limit_rejections": 0}
 
 _BATCH_PLANS: dict[tuple, "BatchPlan"] = {}
 
 
 def reset_stats() -> None:
+    """Zero the module counters.  The counters are GLOBAL (shared by
+    every server in the process); the documented invariant
+
+        stats["launches"] == sum(r.launches for r in server.reports)
+
+    therefore holds only for a single server whose lifetime starts at
+    the reset -- use ``GeometryServer.reset_stats()``, which resets the
+    module counters AND the server's accumulated report history in one
+    step, when asserting it."""
     for k in stats:
         stats[k] = 0
 
@@ -414,6 +430,14 @@ class GeometryServer:
         self._pending: list[_Pending] = []
         self._ticket = 0
         self.last_report: list[BucketReport] = []
+        #: every BucketReport this server ever produced (last_report is
+        #: the latest flush's slice of it).  This is what makes the
+        #: launch-accounting invariant hold ACROSS flush cycles --
+        #: ``stats["launches"] == sum(r.launches for r in reports)`` for
+        #: a single server whose lifetime starts at a stats reset
+        #: (recovery launches included: recovery counts into the same
+        #: BucketReport objects).  Cleared by ``reset_stats()``.
+        self.reports: list[BucketReport] = []
 
     # -- request intake ------------------------------------------------------
 
@@ -437,16 +461,44 @@ class GeometryServer:
         ``on_q_overflow="reject"``) raises a typed ``RequestError``
         carrying this request's ticket id HERE, before the request can
         reach a packed bucket and take its neighbours down with it."""
+        return self.enqueue(self.validate(chain, points, qformat=qformat))
+
+    def validate(self, chain: tc.TransformChain, points, *,
+                 qformat=None) -> "_Pending":
+        """The intake half of ``submit``: assign a ticket id, run the
+        full validation boundary, and return the queue entry WITHOUT
+        queueing it.  The continuous-batching front-end
+        (``serving.async_engine``) uses this split -- it validates at
+        arrival time but hands entries to ``enqueue`` only when its
+        flush policy schedules them, so the two paths share one
+        validation boundary and one ticket sequence.  Rejected
+        submissions burn their id: the id in a typed error is never
+        reused."""
         ticket = self._ticket
-        self._ticket += 1          # rejected submissions burn their id too:
-        #                            the id in a typed error is never reused
+        self._ticket += 1
         try:
-            p = self._validate(chain, points, qformat, ticket)
+            return self._validate(chain, points, qformat, ticket)
         except errors.RequestError:
             stats["rejected_requests"] += 1
             raise
+
+    def enqueue(self, p: "_Pending") -> int:
+        """Queue a ``validate``d entry for the next flush; returns its
+        ticket.  ``submit`` is exactly ``enqueue(validate(...))``."""
         self._pending.append(p)
-        return ticket
+        return p.ticket
+
+    def reset_stats(self) -> None:
+        """Zero the module counters AND this server's accumulated report
+        history together, so the cross-flush launch-accounting invariant
+        (``stats["launches"] == sum(r.launches for r in self.reports)``,
+        recovery launches included) restarts from a consistent origin.
+        The module-level ``reset_stats`` alone cannot give that: it
+        zeroes the global counters but leaves every server's report
+        history counting launches from before the reset."""
+        reset_stats()
+        self.reports = []
+        self.last_report = []
 
     def _validate(self, chain: tc.TransformChain, points, qformat,
                   ticket: int) -> _Pending:
@@ -675,6 +727,7 @@ class GeometryServer:
                     stacked=jax.tree.map(lambda x: x[sl], stacked),
                     packed=packed[sl], reqs=reqs[sl], report=report))
             self.last_report.append(report)
+            self.reports.append(report)
             stats["buckets"] += 1
             stats["shards"] += len(chunks) - 1 if len(chunks) > 1 else 0
             stats["payload_points"] += payload

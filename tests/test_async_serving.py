@@ -1,0 +1,291 @@
+"""Sync/async equivalence and fault tolerance of the continuous-batching
+front-end: the same seeded workload through ``GeometryServer.flush`` and
+through ``AsyncGeometryServer`` must produce bitwise-identical per-ticket
+results and identical launch/byte counters for EVERY plan kind (diagonal,
+matrix, projective, fixed-point), the awaitable-ticket protocol must
+deliver the same values, and the PR 6 zero-lost-requests invariant must
+hold under fault injection THROUGH the async path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import serving
+from repro.core.transform_chain import TransformChain
+from repro.serving import workload
+from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
+from repro.serving.clock import VirtualClock
+
+
+def _reset():
+    serving.reset_stats()
+    serving.clear_plan_cache()
+
+
+def _fresh_async(**kw):
+    _reset()
+    kw.setdefault("clock", VirtualClock())
+    return AsyncGeometryServer(**kw)
+
+
+#: the counters that must be IDENTICAL between one synchronous flush and
+#: an async drain of the same submissions -- the front-end decides when
+#: buckets launch, never what a launch computes or moves
+_ECONOMY = ("launches", "buckets", "requests", "payload_points",
+            "padded_points", "plan_compiles", "traces")
+
+
+def _snap():
+    return {k: serving.stats[k] for k in _ECONOMY}
+
+
+def _assert_same_result(a, b):
+    """Bitwise equality, including the projective cull mask."""
+    mask_a = getattr(a, "mask", None)
+    mask_b = getattr(b, "mask", None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (mask_a is None) == (mask_b is None)
+    if mask_a is not None:
+        np.testing.assert_array_equal(np.asarray(mask_a),
+                                      np.asarray(mask_b))
+
+
+# ---------------------------------------------------------------------------
+# sync/async bitwise equivalence, per plan kind and mixed
+# ---------------------------------------------------------------------------
+
+#: one workload generator per plan kind the engine compiles
+_KINDS = {
+    "diag": lambda rng: (workload.chain_for(rng, 2, "TST"), None),
+    "matrix": lambda rng: (workload.chain_for(rng, 3, "TRS"), None),
+    "projective": lambda rng: (workload.chain_for(rng, 3, "TSRP"), None),
+    "q8.7": lambda rng: (workload.chain_for(rng, 2, "TTSS"), "q8.7"),
+}
+
+
+def _kind_workload(kind: str, n: int, seed: int):
+    rng = np.random.default_rng([0xA51C, seed])
+    reqs = []
+    for _ in range(n):
+        chain, qname = _KINDS[kind](rng)
+        pts = rng.uniform(-2, 2, (int(rng.integers(1, 40)),
+                                  chain.dim)).astype(np.float32)
+        reqs.append((chain, pts, qname))
+    return reqs
+
+
+@pytest.mark.parametrize("kind", sorted(_KINDS))
+def test_sync_async_bitwise_equivalence(kind):
+    reqs = _kind_workload(kind, 24, seed=3)
+
+    _reset()
+    sync = serving.GeometryServer(backend="ref")
+    for chain, pts, qname in reqs:
+        sync.submit(chain, pts, qformat=qname)
+    sync_results = sync.flush()
+    sync_counters = _snap()
+
+    eng = _fresh_async(backend="ref")
+    tickets = [eng.submit_async(chain, pts, qformat=qname)
+               for chain, pts, qname in reqs]
+    eng.drain()
+    async_counters = _snap()
+
+    assert async_counters == sync_counters
+    for t, expected in zip(tickets, sync_results):
+        assert t.done()
+        _assert_same_result(t.result(), expected)
+
+
+def test_sync_async_equivalence_mixed_lanes():
+    """All plan kinds and both dtype lanes in ONE flush: the async drain
+    must reproduce the synchronous bucket composition exactly."""
+    reqs = workload.mixed_lane_workload(7, 48)
+    assert any(q for _, _, q in reqs) and \
+        any(c.is_projective for c, _, _ in reqs)
+
+    _reset()
+    sync = serving.GeometryServer(backend="ref")
+    for chain, pts, qname in reqs:
+        sync.submit(chain, pts, qformat=qname)
+    sync_results = sync.flush()
+    sync_counters = _snap()
+    assert sync_counters["launches"] < len(reqs)   # batching did happen
+
+    eng = _fresh_async(backend="ref")
+    tickets = [eng.submit_async(chain, pts, qformat=qname)
+               for chain, pts, qname in reqs]
+    eng.drain()
+    assert _snap() == sync_counters
+    for t, expected in zip(tickets, sync_results):
+        _assert_same_result(t.result(), expected)
+    st = eng.stats
+    assert st["resolved"] == len(reqs) and st["failed"] == 0
+    assert st["queue_depth"] == 0
+
+
+def test_async_results_deterministic_across_engines():
+    """Two engines, same submissions, same (virtual) schedule -> bitwise
+    identical resolutions: the determinism the soak gate stands on."""
+    reqs = workload.mixed_lane_workload(13, 24)
+
+    def serve():
+        eng = _fresh_async(backend="ref")
+        ts = [eng.submit_async(c, p, qformat=q) for c, p, q in reqs]
+        eng.drain()
+        return [np.asarray(t.result()) for t in ts]
+
+    for a, b in zip(serve(), serve()):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# awaitable tickets
+# ---------------------------------------------------------------------------
+
+def test_ticket_await_protocol():
+    rng = np.random.default_rng(0)
+    chain = workload.chain_for(rng, 3, "TRS")
+    pts = rng.normal(size=(6, 3)).astype(np.float32)
+    eng = _fresh_async(backend="ref",
+                       slo=SLOConfig(max_wait_s=0.001, target_rows=64))
+
+    async def request_stream():
+        t = eng.submit_async(chain, pts)
+        assert not t.done()
+        out = await t
+        return np.asarray(out)
+
+    got, = eng.run(request_stream())
+    exp = np.asarray(chain.apply(jnp.asarray(pts), backend="ref"))
+    np.testing.assert_allclose(got, exp, rtol=2e-6, atol=2e-6)
+
+
+def test_run_interleaves_multiple_streams():
+    """Coroutines submitting at different virtual instants all resolve,
+    and each awaited value matches that stream's own request."""
+    rng = np.random.default_rng(1)
+    chain = workload.chain_for(rng, 2, "TSRT")
+    eng = _fresh_async(backend="ref",
+                       slo=SLOConfig(max_wait_s=0.002, target_rows=4))
+    payloads = [rng.normal(size=(n, 2)).astype(np.float32)
+                for n in (3, 5, 7)]
+
+    async def stream(pts):
+        first = await eng.submit_async(chain, pts)
+        second = await eng.submit_async(chain, pts * 2)
+        return np.asarray(first), np.asarray(second)
+
+    results = eng.run(*[stream(p) for p in payloads])
+    for pts, (first, second) in zip(payloads, results):
+        exp1 = chain.apply(jnp.asarray(pts), backend="ref")
+        exp2 = chain.apply(jnp.asarray(pts * 2), backend="ref")
+        np.testing.assert_allclose(first, np.asarray(exp1),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(second, np.asarray(exp2),
+                                   rtol=2e-6, atol=2e-6)
+
+
+def test_ticket_result_before_resolution_raises():
+    rng = np.random.default_rng(2)
+    chain = workload.chain_for(rng, 2, "TST")
+    eng = _fresh_async(backend="ref")
+    t = eng.submit_async(chain, np.ones((3, 2), np.float32))
+    with pytest.raises(RuntimeError, match="pending"):
+        t.result()
+    assert t.latency is None
+    eng.drain()
+    assert t.latency == 0.0          # same virtual instant
+
+
+def test_gather_returns_results_in_ticket_order():
+    rng = np.random.default_rng(3)
+    chain = workload.chain_for(rng, 2, "TST")
+    eng = _fresh_async(backend="ref",
+                       slo=SLOConfig(max_wait_s=0.004, target_rows=64))
+    pts = [np.full((2, 2), i, np.float32) for i in range(5)]
+    tickets = [eng.submit_async(chain, p) for p in pts]
+    results = eng.gather(tickets)
+    assert all(t.done() for t in tickets)
+    for r, p in zip(results, pts):
+        exp = chain.apply(jnp.asarray(p), backend="ref")
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(exp))
+
+
+# ---------------------------------------------------------------------------
+# identity chains ride the always-due passthrough
+# ---------------------------------------------------------------------------
+
+def test_identity_chain_resolves_on_first_poll():
+    eng = _fresh_async(backend="ref",
+                       slo=SLOConfig(max_wait_s=10.0, target_rows=64))
+    pts = np.arange(8, dtype=np.float32).reshape(4, 2)
+    t = eng.submit_async(TransformChain.identity(2), pts)
+    assert eng.next_due_in() == 0.0     # no launch to amortise
+    assert eng.poll() == 1
+    np.testing.assert_array_equal(np.asarray(t.result()), pts)
+    assert serving.stats["launches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# typed rejections at the async intake
+# ---------------------------------------------------------------------------
+
+def test_validation_rejection_releases_admission_slot():
+    rng = np.random.default_rng(4)
+    chain = workload.chain_for(rng, 2, "TST")
+    eng = _fresh_async(backend="ref")
+    with pytest.raises(serving.RequestError) as exc:
+        eng.submit_async(chain, np.ones((3, 3), np.float32))  # wrong dim
+    assert exc.value.code == "shape"
+    # the request never queued: slot, admitted count, and module stats
+    assert eng.queue_depth == 0
+    st = eng.stats
+    assert st["admitted"] == 0
+    assert serving.stats["admitted_requests"] == 0
+    assert serving.stats["rejected_requests"] == 1
+    # the engine still serves afterwards
+    t = eng.submit_async(chain, np.ones((3, 2), np.float32))
+    eng.drain()
+    assert t.done()
+
+
+# ---------------------------------------------------------------------------
+# PR 6 fault tolerance composes with continuous batching
+# ---------------------------------------------------------------------------
+
+def test_chaos_zero_lost_through_async_path():
+    """Every admitted request resolves to points or a typed error under
+    fault injection -- the zero-lost invariant, now on the async path."""
+    reqs = workload.mixed_lane_workload(21, 48)
+    inj = serving.FaultInjector(seed=21, flaky_rate=0.1, backend_rate=0.08,
+                                corrupt_rate=0.08, poison_rate=0.05)
+    eng = _fresh_async(backend="interpret", injector=inj,
+                       fault_config=serving.FaultConfig(backoff_base_s=0.0))
+    tickets = [eng.submit_async(c, p, qformat=q) for c, p, q in reqs]
+    eng.drain()
+
+    assert all(t.done() for t in tickets)
+    failed = [t for t in tickets if serving.is_error(t.result())]
+    resolved = [t for t in tickets if not serving.is_error(t.result())]
+    # the injector's rates guarantee the ladder actually ran
+    assert serving.stats["launch_failures"] > 0
+    for t in failed:
+        assert isinstance(t.result(), serving.LaunchError)
+        assert t.result().ticket == t.id
+    st = eng.stats
+    assert st["resolved"] == len(resolved)
+    assert st["failed"] == len(failed)
+    assert st["resolved"] + st["failed"] == st["admitted"] == len(reqs)
+    assert st["queue_depth"] == 0
+
+    # recovered results are the true values: spot-check a few against
+    # the oracle the chaos harness uses
+    for t, (chain, pts, qname) in list(zip(tickets, reqs))[:8]:
+        if serving.is_error(t.result()) or qname is not None:
+            continue
+        if chain.is_projective:
+            continue
+        exp = chain.apply(jnp.asarray(pts), backend="interpret")
+        np.testing.assert_allclose(np.asarray(t.result()), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)

@@ -275,3 +275,50 @@ def test_serving_records_packed_bytes_per_launch():
     # 8 requests x k=4 primitives of sequential per-primitive dispatch
     sequential = 8 * 4 * 2 * (60 * 2 * 4)
     assert nbytes < sequential
+
+
+# ---------------------------------------------------------------------------
+# stats reset semantics: the launch invariant across flush cycles
+# ---------------------------------------------------------------------------
+
+def test_stats_launch_invariant_across_flush_cycles():
+    """``stats["launches"] == sum(r.launches for r in srv.reports)`` must
+    hold across MULTIPLE flushes (reports accumulate; last_report is only
+    the latest flush's slice) and survive a per-server reset."""
+    rng = np.random.default_rng(51)
+    srv = _fresh_server(backend="ref")
+    for cycle in range(3):
+        for chain, pts in workload.random_workload(rng, 12, max_points=80):
+            srv.submit(chain, pts)
+        srv.flush()
+        assert serving.stats["launches"] == \
+            sum(r.launches for r in srv.reports)
+    assert len(srv.reports) > len(srv.last_report)  # accumulated, not sliced
+    # per-server reset zeroes BOTH sides of the invariant in one step
+    srv.reset_stats()
+    assert serving.stats["launches"] == 0 and srv.reports == []
+    for chain, pts in workload.random_workload(rng, 8, max_points=80):
+        srv.submit(chain, pts)
+    srv.flush()
+    assert serving.stats["launches"] == sum(r.launches for r in srv.reports)
+
+
+def test_stats_launch_invariant_holds_through_recovery():
+    """Recovery launches (retries, ladder rungs, bisection probes) count
+    into the SAME per-bucket reports the module counter sums over, so the
+    invariant survives fault injection too."""
+    reqs = workload.mixed_lane_workload(33, 32)
+    inj = serving.FaultInjector(seed=33, flaky_rate=0.12, backend_rate=0.08,
+                                corrupt_rate=0.08, poison_rate=0.05)
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    srv = serving.GeometryServer(backend="interpret", injector=inj,
+                                 fault_config=serving.FaultConfig(
+                                     backoff_base_s=0.0))
+    for cycle in range(2):
+        for chain, pts, qname in reqs:
+            srv.submit(chain, pts, qformat=qname)
+        srv.flush()
+        assert serving.stats["launches"] == \
+            sum(r.launches for r in srv.reports)
+    assert serving.stats["launch_failures"] > 0     # the ladder really ran

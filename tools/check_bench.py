@@ -54,6 +54,13 @@ DETERMINISTIC_FIELDS = frozenset({
     "backend_fallbacks", "bisections", "recovered_requests", "q_fallbacks",
     "injected_launch_faults", "injected_corruptions", "launches_clean",
     "launches_chaos", "extra_launches",
+    # continuous-batching counters (soak_* rows): arrivals, admission
+    # decisions, flush scheduling, and even the latency percentiles are
+    # VIRTUAL-clock quantities -- pure functions of the seed -- so they
+    # gate exactly alongside the launch economy ("virtual" in the name
+    # is the marker separating them from never-gated wall-clock fields)
+    "admitted", "rate_limited", "queue_full", "failed", "polls",
+    "p50_virtual_us", "p99_virtual_us", "virtual_rps",
 })
 
 #: rows whose presence (in BOTH files) the gate insists on -- the launch
