@@ -97,6 +97,12 @@ def main(argv=None) -> None:
                          "Poisson arrivals through the async front-end "
                          "on a virtual clock; deterministic admission/"
                          "latency counters, exact-gated)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="with --soak: write the traced soak's span "
+                         "stream as byte-deterministic Chrome-trace JSON")
+    ap.add_argument("--prom", default=None, metavar="OUT.prom",
+                    help="with --soak: write the traced soak's registry "
+                         "state as Prometheus text")
     ap.add_argument("--out", default=None,
                     help="JSON record path (default benchmarks/"
                          "BENCH_<timestamp>.json; '' disables)")
@@ -132,7 +138,8 @@ def main(argv=None) -> None:
         rows += chaos_bench.run(smoke=args.smoke)
     if args.soak:
         print("\n== soak (Poisson arrivals through the async front-end) ==")
-        rows += soak_bench.run(smoke=args.smoke)
+        rows += soak_bench.run(smoke=args.smoke, trace_path=args.trace,
+                               prom_path=args.prom)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

@@ -25,6 +25,15 @@ Two row families (see benchmarks/PERF.md):
     across backends, and bisect UNDER the async path, and the gate pins
     ``lost=0`` plus the exact recovery counters -- the proof that the
     recovery ladder composes with continuous batching.
+  * ``soak_trace{_smoke}`` -- a small soak served under a ``repro.obs``
+    tracer sharing the soak's ``VirtualClock``: every span timestamp is
+    a pure function of the seed, so the exported Chrome-trace JSON is
+    BYTE-identical across runs (the obs-smoke CI lane diffs two
+    independent runs and the committed ``benchmarks/traces/`` snapshot)
+    and the span/event counts sit in the exact-match gate.
+  * ``soak_trace_overhead{_smoke}`` -- the same small soak twice, traced
+    and untraced, gating ``counters_identical=1``: instrumentation
+    observes the serving stack, it never steers it.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.serving import admission as adm
 from repro.serving import engine, faults, workload
 from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
@@ -40,6 +50,9 @@ from repro.serving.clock import VirtualClock
 SEED = 17
 SMOKE_REQUESTS = 100_000
 FULL_REQUESTS = 1_000_000
+#: arrivals in the traced soak (both lanes: the committed trace must
+#: stay small enough to live in the repo)
+TRACE_REQUESTS = 250
 #: distinct requests in the replayed pool (cycled; pool generation is
 #: seeded so the request mix is identical across runs and machines)
 POOL = 384
@@ -52,7 +65,10 @@ def drive_soak(n_requests: int, *, backend: str = "ref",
                max_queue_depth: int = 1024,
                slo: SLOConfig | None = None,
                max_points: int = 48,
-               injector: faults.FaultInjector | None = None) -> dict:
+               injector: faults.FaultInjector | None = None,
+               traced: bool = False,
+               trace_path: str | None = None,
+               prom_path: str | None = None) -> dict:
     """Drive one seeded Poisson soak; returns the deterministic counters.
 
     The timeline is virtual: the driver alternates between the next
@@ -61,6 +77,12 @@ def drive_soak(n_requests: int, *, backend: str = "ref",
     deployment runs, minus the waiting.  Every random draw (arrival
     gaps, tenant assignment, workload pool) comes from seeded
     generators, so the returned counters are bit-stable.
+
+    ``traced`` serves the soak under a tracer on the soak's OWN virtual
+    clock (the counters gain exact-gateable ``trace_spans`` /
+    ``trace_events``); ``trace_path`` additionally writes the stream as
+    deterministic Chrome-trace JSON, and ``prom_path`` writes the
+    engines' registries as Prometheus text.
     """
     pool = workload.mixed_lane_workload(SEED, POOL, max_points=max_points)
     # defaults tuned so BOTH flush triggers fire (most buckets fill to
@@ -83,45 +105,59 @@ def drive_soak(n_requests: int, *, backend: str = "ref",
         **server_kw)
     rng = np.random.default_rng([0x50AF, SEED])
     base = {k: engine.stats[k] for k in engine.stats}
+    tracer = obs.Tracer(clock=clock) if traced or trace_path is not None \
+        else obs.NullTracer()
 
     next_arrival = 0.0
     polls = 0
     i = 0
     wall0 = time.perf_counter()
-    while i < n_requests:
-        nd = eng.next_due_in()
-        if nd is not None and clock.now() + nd < next_arrival:
+    with obs.installed(tracer):
+        while i < n_requests:
+            nd = eng.next_due_in()
+            if nd is not None and clock.now() + nd < next_arrival:
+                clock.advance(nd)
+                eng.poll()
+                polls += 1
+                continue
+            clock.advance_to(next_arrival)
+            tenant = f"t{int(rng.integers(n_tenants))}"
+            chain, pts, qname = pool[i % POOL]
+            try:
+                # tickets are deliberately dropped: resolution is counted
+                # in the engine telemetry, and lost-request accounting
+                # below is what proves none fell through
+                eng.submit_async(chain, pts, tenant=tenant, qformat=qname)
+            except (adm.QueueFullError, adm.RateLimitError):
+                pass                  # counted by the admission controller
+            i += 1
+            next_arrival += float(rng.exponential(1.0 / rate_rps))
+        # let the flush policy retire the tail on its own deadlines (a
+        # drain would skew the latency telemetry)
+        while True:
+            nd = eng.next_due_in()
+            if nd is None:
+                break
             clock.advance(nd)
             eng.poll()
             polls += 1
-            continue
-        clock.advance_to(next_arrival)
-        tenant = f"t{int(rng.integers(n_tenants))}"
-        chain, pts, qname = pool[i % POOL]
-        try:
-            # tickets are deliberately dropped: resolution is counted in
-            # the engine telemetry, and lost-request accounting below is
-            # what proves none fell through
-            eng.submit_async(chain, pts, tenant=tenant, qformat=qname)
-        except (adm.QueueFullError, adm.RateLimitError):
-            pass                      # counted by the admission controller
-        i += 1
-        next_arrival += float(rng.exponential(1.0 / rate_rps))
-    # let the flush policy retire the tail on its own deadlines (a drain
-    # would skew the latency telemetry)
-    while True:
-        nd = eng.next_due_in()
-        if nd is None:
-            break
-        clock.advance(nd)
-        eng.poll()
-        polls += 1
     wall_s = time.perf_counter() - wall0
 
     st = eng.stats
     delta = {k: engine.stats[k] - base[k] for k in base}
     assert st["queue_depth"] == 0, "soak ended with requests still queued"
+    trace_fields = {}
+    if tracer.enabled:
+        trace_fields = {"trace_spans": tracer.n_spans,
+                        "trace_events": tracer.n_events}
+    if trace_path is not None:
+        obs.dump_chrome_trace(tracer, trace_path)
+    if prom_path is not None:
+        with open(prom_path, "w") as f:
+            f.write(obs.prometheus_text(eng.metrics, eng.server.metrics,
+                                        eng._admission.metrics))
     return {
+        **trace_fields,
         "requests": n_requests,
         "admitted": st["admitted"],
         "rate_limited": st["rate_limit_rejections"],
@@ -150,13 +186,38 @@ _GATED = ("requests", "admitted", "rate_limited", "queue_full", "resolved",
           "padded_points", "retries", "backend_fallbacks", "bisections",
           "polls", "p50_virtual_us", "p99_virtual_us", "virtual_rps")
 
+#: the traced row additionally pins the span stream's exact size
+_GATED_TRACE = _GATED + ("trace_spans", "trace_events")
 
-def _row(name: str, counters: dict) -> str:
-    derived = ";".join(f"{k}={counters[k]}" for k in _GATED)
+
+def _row(name: str, counters: dict, gated: tuple = _GATED) -> str:
+    derived = ";".join(f"{k}={counters[k]}" for k in gated)
     return f"{name},{counters['wall_s'] * 1e6:.1f},{derived}"
 
 
-def run(smoke: bool = False) -> list[str]:
+def _cold_caches() -> None:
+    """Drop both plan caches.  Plan compiles/hits and jit re-traces are
+    TRACED events, so the traced soak is only byte-reproducible if it
+    always starts cold -- independent of whatever ran earlier in the
+    process."""
+    from repro.core import transform_chain as tc
+    engine.clear_plan_cache()
+    tc.clear_plan_cache()
+
+
+def run_traced(trace_path: str | None, prom_path: str | None) -> list[dict]:
+    """The traced-soak pair (untraced, traced), both from cold caches;
+    writes the Chrome/Prometheus artifacts when paths are given."""
+    _cold_caches()
+    cu = drive_soak(TRACE_REQUESTS)
+    _cold_caches()
+    ct = drive_soak(TRACE_REQUESTS, traced=True, trace_path=trace_path,
+                    prom_path=prom_path)
+    return [cu, ct]
+
+
+def run(smoke: bool = False, trace_path: str | None = None,
+        prom_path: str | None = None) -> list[str]:
     tag = "_smoke" if smoke else ""
     n = SMOKE_REQUESTS if smoke else FULL_REQUESTS
 
@@ -182,4 +243,56 @@ def run(smoke: bool = False) -> list[str]:
           f"lost={cc['lost']} ({cc['retries']} retries, "
           f"{cc['backend_fallbacks']} fallbacks, {cc['bisections']} "
           f"bisections) in {cc['wall_s']:.1f} wall s")
+
+    # traced + overhead rows: one small soak untraced, the SAME soak
+    # traced (and exported), gating that the counters cannot tell the
+    # difference -- instrumentation observes, it never steers
+    cu, ct = run_traced(trace_path, prom_path)
+    rows.append(_row(f"soak_trace{tag}", ct, _GATED_TRACE))
+    identical = all(cu[k] == ct[k] for k in _GATED)
+    overhead = (ct["wall_s"] - cu["wall_s"]) / cu["wall_s"] * 100.0
+    rows.append(_row(f"soak_trace_overhead{tag}",
+                     {**ct, "counters_identical": int(identical),
+                      "overhead_pct": round(overhead, 1)},
+                     _GATED + ("counters_identical", "overhead_pct")))
+    print(f"[soak] trace: {ct['requests']} arrivals traced -> "
+          f"{ct['trace_spans']} spans / {ct['trace_events']} events "
+          f"(untraced {cu['wall_s'] * 1e3:.0f} ms vs traced "
+          f"{ct['wall_s'] * 1e3:.0f} ms; counters identical: {identical})")
     return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="seeded soak benchmark (see module docstring)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="where the traced soak writes its Chrome-trace "
+                         "JSON (byte-identical across runs)")
+    ap.add_argument("--prom", default=None, metavar="OUT.prom",
+                    help="where the traced soak writes its Prometheus "
+                         "text snapshot")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="run just the traced soak pair (the obs-smoke "
+                         "CI lane byte-diffs two runs of this)")
+    ap.add_argument("--out", default=None,
+                    help="append benchmark rows to this CSV")
+    args = ap.parse_args(argv)
+    if args.trace_only:
+        cu, ct = run_traced(args.trace, args.prom)
+        identical = all(cu[k] == ct[k] for k in _GATED)
+        print(f"[soak] trace-only: {ct['trace_spans']} spans / "
+              f"{ct['trace_events']} events; counters identical: "
+              f"{identical}")
+        if not identical:
+            raise SystemExit("traced counters diverged from untraced")
+        return
+    rows = run(smoke=args.smoke, trace_path=args.trace, prom_path=args.prom)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.writelines(r + "\n" for r in rows)
+
+
+if __name__ == "__main__":
+    main()

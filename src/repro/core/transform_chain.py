@@ -68,6 +68,7 @@ import numpy as np
 from repro import errors, quantize
 from repro.autotune import cache as tuning
 from repro.kernels import dispatch, opcount
+from repro.obs import trace as obst
 from repro.kernels.affine import chain_diag as _k_chain_diag
 from repro.kernels.fixedpoint import chain_apply_q as _k_chain_apply_q
 from repro.kernels.fixedpoint import chain_diag_q as _k_chain_diag_q
@@ -86,6 +87,17 @@ _AXES = {"x": 0, "y": 1, "z": 2}
 #:   traces   -- executions of a plan body under jax tracing (a cached plan
 #:               applied at a seen shape/dtype must not bump this)
 stats = {"compiles": 0, "hits": 0, "traces": 0}
+
+
+def _count_trace(kernel: str, backend: str) -> None:
+    """Jit re-trace bookkeeping: the counter plus (when a tracer is
+    installed) a ``plan.trace`` instant -- re-traces are where compile
+    latency hides, so the trace marks each one with its kernel."""
+    stats["traces"] += 1
+    trc = obst.active()
+    if trc.enabled:
+        trc.instant("plan.trace", cache="chain", kernel=kernel,
+                    backend=backend)
 
 _PLAN_CACHE: dict[tuple, "Plan"] = {}
 
@@ -401,7 +413,7 @@ def _compile_q(structure: tuple, backend: str, qname: str) -> Plan:
 
     if kind == "diag":
         def body(folded_q, pts2):
-            stats["traces"] += 1
+            _count_trace("chain_diag_q", backend)
             s, t = folded_q
             cfg = tuning.config_for("chain_diag_q", backend, fmt.name,
                                     pts2.shape[0])
@@ -409,7 +421,7 @@ def _compile_q(structure: tuple, backend: str, qname: str) -> Plan:
                                    backend=backend, config=cfg)
     else:
         def body(folded_q, pts2):
-            stats["traces"] += 1
+            _count_trace("chain_apply_q", backend)
             a, t = folded_q
             cfg = tuning.config_for("chain_apply_q", backend, fmt.name,
                                     pts2.shape[0])
@@ -434,21 +446,21 @@ def _compile(structure: tuple, backend: str) -> Plan:
     # agree bitwise.
     if kind == "diag":
         def body(folded, pts2):
-            stats["traces"] += 1
+            _count_trace("chain_diag", backend)
             s, t = folded
             cfg = tuning.config_for("chain_diag", backend,
                                     str(pts2.dtype), pts2.shape[0])
             return _k_chain_diag(pts2, s, t, backend=backend, config=cfg)
     elif kind == "matrix":
         def body(folded, pts2):
-            stats["traces"] += 1
+            _count_trace("chain_apply", backend)
             a, t = folded
             cfg = tuning.config_for("chain_apply", backend,
                                     str(pts2.dtype), pts2.shape[0])
             return _k_chain_apply(pts2, a, t, backend=backend, config=cfg)
     else:
         def body(folded, pts2):
-            stats["traces"] += 1
+            _count_trace("chain_project", backend)
             h, lo, hi = folded
             cfg = tuning.config_for("chain_project", backend,
                                     str(pts2.dtype), pts2.shape[0])
@@ -463,13 +475,20 @@ def _get_plan(structure: tuple, backend: str,
               qname: str | None = None) -> Plan:
     key = (structure, backend, qname)
     plan = _PLAN_CACHE.get(key)
+    trc = obst.active()
     if plan is None:
         stats["compiles"] += 1
+        if trc.enabled:
+            trc.instant("plan.compile", cache="chain", backend=backend,
+                        q=qname, length=len(structure))
         plan = _compile_q(structure, backend, qname) if qname is not None \
             else _compile(structure, backend)
         _PLAN_CACHE[key] = plan
     else:
         stats["hits"] += 1
+        if trc.enabled:
+            trc.instant("plan.hit", cache="chain", backend=backend,
+                        q=qname, length=len(structure))
     return plan
 
 

@@ -12,7 +12,10 @@ against per-request dispatch:
 executes so the documented command cannot rot).  ``--autotune`` enables
 the tuning cache (``repro.autotune``): the size grid and kernel launch
 parameters come from the committed winners instead of the hardcoded
-defaults, and the schedule header names the grid's source.
+defaults, and the schedule header names the grid's source.  ``--trace
+out.json`` serves the counted flush under a ``repro.obs`` tracer and
+writes the span stream as Chrome-trace JSON -- open it in Perfetto
+(one track per plan bucket, request spans on the main track).
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro import serving
+from repro import obs, serving
 from repro.serving import workload
 from repro.serving.workload import timed as _timed
 
@@ -29,10 +32,12 @@ from repro.serving.workload import timed as _timed
 def run_workload(requests: int, *, backend: str,
                  waste_cap: float | None = None,
                  max_points: int, max_points_per_launch: int | None,
-                 seed: int, compare: bool = True) -> dict:
+                 seed: int, compare: bool = True,
+                 trace_path: str | None = None) -> dict:
     """Serve one workload; returns the timing/schedule summary dict.
     ``waste_cap=None`` defers to the server's grid resolution (the tuning
-    cache when ``repro.autotune`` is enabled, else the default grid)."""
+    cache when ``repro.autotune`` is enabled, else the default grid).
+    ``trace_path`` traces the counted flush and writes Chrome JSON."""
     reqs = workload.random_workload(seed=seed, n_requests=requests,
                                     max_points=max_points)
 
@@ -42,7 +47,14 @@ def run_workload(requests: int, *, backend: str,
     warm = srv.serve(reqs)                       # compile + trace once
     jax.block_until_ready(warm)
     serving.reset_stats()
-    srv.serve(reqs)                              # one counted flush
+    if trace_path is not None:
+        tracer = obs.Tracer()
+        with obs.installed(tracer):
+            srv.serve(reqs)                      # one counted, traced flush
+        obs.dump_chrome_trace(tracer, trace_path)
+        print(f"wrote {tracer.n_events} trace events to {trace_path}")
+    else:
+        srv.serve(reqs)                          # one counted flush
     stats = dict(serving.stats)
     batched_s = min(_timed(lambda: srv.serve(reqs)) for _ in range(3))
 
@@ -100,6 +112,9 @@ def main(argv=None) -> None:
                     help="skip the per-request dispatch baseline")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload; CI liveness check")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write the counted flush's span stream as "
+                         "Chrome-trace JSON (open in Perfetto)")
     args = ap.parse_args(argv)
 
     if args.autotune:
@@ -110,7 +125,8 @@ def main(argv=None) -> None:
     res = run_workload(requests, backend=args.backend,
                        waste_cap=args.waste_cap, max_points=max_points,
                        max_points_per_launch=args.max_points_per_launch,
-                       seed=args.seed, compare=not args.no_compare)
+                       seed=args.seed, compare=not args.no_compare,
+                       trace_path=args.trace)
     print_summary(res)
 
 

@@ -1,0 +1,45 @@
+"""Observability: deterministic tracing, typed metrics, exporters, and a
+flight recorder for the serving stack.
+
+The layer has four pieces (see ``docs/architecture.md`` section 8):
+
+  * ``obs.trace``    -- span-tree tracer with an injectable clock; under
+    ``serving.clock.VirtualClock`` every timestamp and span count is
+    bit-deterministic and exactly CI-gateable.  Disabled by default
+    (``NullTracer``): each engine hook is one branch.
+  * ``obs.metrics``  -- typed registry (counters / gauges / histograms
+    with the shared nearest-rank ``percentile``) unifying the serving
+    stack's ad-hoc stats dicts behind back-compat views, with labeled
+    dimensions (tenant, plan kind, backend, dtype/qformat, size class).
+  * ``obs.export``   -- Chrome-trace-event JSON (Perfetto: one track per
+    plan bucket + one per recovery ladder) and Prometheus text
+    exposition.
+  * ``obs.recorder`` -- bounded ring-buffer flight recorder dumped into
+    ``LaunchError`` / chaos post-mortems.
+
+Quickstart::
+
+    from repro import obs
+    from repro.serving.clock import VirtualClock
+
+    trc = obs.Tracer(clock=VirtualClock(),
+                     recorder=obs.FlightRecorder(256))
+    with obs.installed(trc):
+        ...serve...
+    obs.dump_chrome_trace(trc, "out.json")       # open in Perfetto
+    print(obs.prometheus_text(my_registry))
+"""
+from repro.obs.export import (chrome_trace, chrome_trace_events,
+                              dump_chrome_trace, prometheus_text)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               StatsView, percentile)
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import (NullTracer, Span, SpanNode, Tracer, active,
+                             install, installed)
+
+__all__ = [
+    "Counter", "FlightRecorder", "Gauge", "Histogram", "MetricsRegistry",
+    "NullTracer", "Span", "SpanNode", "StatsView", "Tracer", "active",
+    "chrome_trace", "chrome_trace_events", "dump_chrome_trace", "install",
+    "installed", "percentile", "prometheus_text",
+]

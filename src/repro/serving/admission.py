@@ -38,6 +38,8 @@ import dataclasses
 import math
 
 from repro import errors
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.serving.clock import Clock
 
 
@@ -135,18 +137,49 @@ class AdmissionController:
     The engine calls ``admit`` at submit (raises the typed rejection) and
     ``release`` when a request leaves the queue for a launch.  Counters
     (``admitted`` / ``queue_full_rejections`` / ``rate_limit_rejections``)
-    are per-controller; the engine mirrors them into ``serving.stats``.
+    are registry-backed per controller (read them as plain ints exactly
+    as before -- they are properties over ``repro.obs.metrics`` counters,
+    with per-tenant rejection labels on the side); the engine mirrors
+    them into ``serving.stats`` by delta.
     """
 
-    def __init__(self, config: AdmissionConfig, clock: Clock):
+    def __init__(self, config: AdmissionConfig, clock: Clock,
+                 metrics: obsm.MetricsRegistry | None = None):
         self.config = config
         self.clock = clock
         self.depth = 0                               # total queued
         self.tenant_depth: dict[str, int] = {}       # queued per tenant
         self._buckets: dict[str, TokenBucket] = {}
-        self.admitted = 0
-        self.queue_full_rejections = 0
-        self.rate_limit_rejections = 0
+        self.metrics = metrics if metrics is not None \
+            else obsm.MetricsRegistry("admission")
+        self._c_admitted = self.metrics.counter("admitted")
+        self._c_queue_full = self.metrics.counter("queue_full_rejections")
+        self._c_rate_limit = self.metrics.counter("rate_limit_rejections")
+        self._rejections = self.metrics.counter(
+            "rejections", labels=("tenant", "code"))
+
+    # back-compat integer views over the registry counters ------------------
+
+    @property
+    def admitted(self) -> int:
+        return self._c_admitted.value
+
+    @property
+    def queue_full_rejections(self) -> int:
+        return self._c_queue_full.value
+
+    @property
+    def rate_limit_rejections(self) -> int:
+        return self._c_rate_limit.value
+
+    def _reject(self, counter: obsm.Counter, tenant: str,
+                code: str, gate: str) -> None:
+        counter.inc()
+        self._rejections.labels(tenant=tenant, code=code).inc()
+        trc = obst.active()
+        if trc.enabled:
+            trc.instant("admission.reject", tenant=tenant, code=code,
+                        gate=gate)
 
     def _bucket(self, tenant: str) -> TokenBucket | None:
         if self.config.tenant_rate is None:
@@ -168,24 +201,27 @@ class AdmissionController:
         backpressure never doubles as a rate penalty."""
         cfg = self.config
         if self.depth >= cfg.max_queue_depth:
-            self.queue_full_rejections += 1
+            self._reject(self._c_queue_full, tenant, QueueFullError.code,
+                         "depth")
             raise QueueFullError(
                 f"queue full ({self.depth}/{cfg.max_queue_depth} waiting); "
                 f"retry after the next flush")
         held = self.tenant_depth.get(tenant, 0)
         if held >= cfg.tenant_cap:
-            self.queue_full_rejections += 1
+            self._reject(self._c_queue_full, tenant, QueueFullError.code,
+                         "fair-share")
             raise QueueFullError(
                 f"tenant {tenant!r} holds its fair share of the queue "
                 f"({held}/{cfg.tenant_cap} of {cfg.max_queue_depth})")
         bucket = self._bucket(tenant)
         if bucket is not None and not bucket.take(self.clock.now()):
-            self.rate_limit_rejections += 1
+            self._reject(self._c_rate_limit, tenant, RateLimitError.code,
+                         "token-bucket")
             wait = bucket.next_admissible_in(self.clock.now())
             raise RateLimitError(
                 f"tenant {tenant!r} over {cfg.tenant_rate:g} req/s "
                 f"(burst {cfg.tenant_burst:g}); admissible in {wait:.6f} s")
-        self.admitted += 1
+        self._c_admitted.inc()
         self.depth += 1
         self.tenant_depth[tenant] = held + 1
 
@@ -194,7 +230,7 @@ class AdmissionController:
         (validation refused it): the slot and the admitted count go
         back, but not any spent rate token -- the tenant did submit."""
         self.release(tenant)
-        self.admitted -= 1
+        self._c_admitted.inc(-1)
 
     def release(self, tenant: str) -> None:
         """One queued request of ``tenant`` left the queue for a launch."""

@@ -55,9 +55,11 @@ import dataclasses
 import typing
 
 from repro.kernels import dispatch
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.serving import engine
 from repro.serving.admission import AdmissionConfig, AdmissionController
-from repro.serving.clock import Clock, MonotonicClock, percentile
+from repro.serving.clock import Clock, MonotonicClock
 
 _UNSET = object()
 
@@ -210,13 +212,21 @@ class AsyncGeometryServer:
         self._admission = AdmissionController(
             admission or AdmissionConfig(), self.clock)
         self._groups: dict[tuple, _Group] = {}   # insertion = first arrival
-        # telemetry (per engine; deterministic under a VirtualClock)
-        self._latencies: list[float] = []
-        self._resolved = 0
-        self._failed = 0
+        # telemetry (per engine; deterministic under a VirtualClock):
+        # registry-backed -- the ``stats`` property is a back-compat view
+        # over these instruments
+        self.metrics = obsm.MetricsRegistry("async")
+        self._h_latency = self.metrics.histogram(
+            "request_latency_s", help="admission-to-resolution seconds")
+        self._c_resolved = self.metrics.counter("resolved")
+        self._c_failed = self.metrics.counter("failed")
+        self._g_depth = self.metrics.gauge("max_queue_depth_seen")
         self._first_arrival: float | None = None
         self._last_resolution: float | None = None
-        self._max_depth_seen = 0
+        # last-mirrored admission totals: the module aggregate is bumped
+        # by DELTAS so several engines never clobber each other's counts
+        self._mirrored = {"queue_full_rejections": 0,
+                          "rate_limit_rejections": 0}
 
     # -- intake --------------------------------------------------------------
 
@@ -239,17 +249,27 @@ class AsyncGeometryServer:
         ``QueueFullError`` / ``RateLimitError`` with stable codes for
         backpressure, the intake family for malformed payloads -- so a
         caller's error handling is one ``except RequestError``."""
+        trc = obst.active()
+        sid = trc.begin("request.submit", tenant=tenant) \
+            if trc.enabled else None
         try:
             self._admission.admit(tenant)    # raises typed rejection
-        except BaseException:
+        except BaseException as e:
             self._mirror_admission_stats()
+            if sid is not None:
+                trc.end(sid, outcome="rejected",
+                        gate="admission",
+                        code=getattr(e, "code", type(e).__name__))
             raise
         try:
             p = self._server.validate(chain, points, qformat=qformat)
-        except BaseException:
+        except BaseException as e:
             # never queued: the slot (but not the spent rate token --
             # the tenant did submit) goes back
             self._admission.unadmit(tenant)
+            if sid is not None:
+                trc.end(sid, outcome="rejected", gate="validate",
+                        code=getattr(e, "code", type(e).__name__))
             raise
         finally:
             self._mirror_admission_stats()
@@ -262,8 +282,12 @@ class AsyncGeometryServer:
         group.entries.append(_Waiting(p, ticket, tenant, now))
         if self._first_arrival is None:
             self._first_arrival = now
-        self._max_depth_seen = max(self._max_depth_seen, self.queue_depth)
-        engine.stats["admitted_requests"] += 1
+        self._g_depth.track_max(self.queue_depth)
+        self._server._bump("admitted_requests")
+        self.metrics.counter("tenant_requests", labels=("tenant",)) \
+            .labels(tenant=tenant).inc()
+        if sid is not None:
+            trc.end(sid, ticket=p.ticket, outcome="admitted")
         return ticket
 
     def _group_key(self, p: engine._Pending) -> tuple:
@@ -277,13 +301,20 @@ class AsyncGeometryServer:
             p, dispatch.resolve(self._server.backend))
 
     def _mirror_admission_stats(self) -> None:
-        """Copy the controller's rejection counters into the module
-        ``serving.stats`` dict (absolute, not incremental: the
-        controller owns the truth)."""
-        engine.stats["queue_full_rejections"] = \
-            self._admission.queue_full_rejections
-        engine.stats["rate_limit_rejections"] = \
-            self._admission.rate_limit_rejections
+        """Mirror the controller's rejection counters into the module
+        ``serving.stats`` aggregate and this engine's registry by DELTA.
+        The old absolute-assignment mirror silently clobbered the
+        aggregate when two engines served side by side (last writer
+        wins); deltas compose, so the module view is now the true sum
+        across engines."""
+        ctrl = self._admission
+        for name, total in (
+                ("queue_full_rejections", ctrl.queue_full_rejections),
+                ("rate_limit_rejections", ctrl.rate_limit_rejections)):
+            delta = total - self._mirrored[name]
+            if delta:
+                self._mirrored[name] = total
+                self._server._bump(name, delta)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -305,6 +336,22 @@ class AsyncGeometryServer:
         due = [g for g in self._groups.values()
                if g.due_in(now, self.slo) <= 0.0]
         due.sort(key=lambda g: g.oldest_arrival)
+        trc = obst.active()
+        if trc.enabled:
+            for g in due:
+                # why this group launches NOW: the fill-vs-deadline
+                # decision the flush policy just made
+                if g.key[0] == "identity":
+                    reason = "identity"
+                elif len(g.entries) >= self.slo.target_rows:
+                    reason = "fill"
+                else:
+                    reason = "deadline"
+                trc.instant("policy.launch", reason=reason,
+                            rows=len(g.entries),
+                            age=now - g.oldest_arrival,
+                            tickets=tuple(e.pending.ticket
+                                          for e in g.entries))
         return self._flush_groups(due)
 
     def drain(self) -> int:
@@ -316,6 +363,10 @@ class AsyncGeometryServer:
         entries = sorted((e for g in self._groups.values()
                           for e in g.entries),
                          key=lambda e: e.pending.ticket)
+        trc = obst.active()
+        if trc.enabled and entries:
+            trc.instant("policy.drain", groups=len(self._groups),
+                        rows=len(entries))
         self._groups.clear()
         return self._flush_entries(entries)
 
@@ -328,6 +379,14 @@ class AsyncGeometryServer:
     def _flush_entries(self, entries: list[_Waiting]) -> int:
         if not entries:
             return 0
+        trc = obst.active()
+        launch_at = self.clock.now()
+        if trc.enabled:
+            # retroactive: each entry's time parked in the policy queue,
+            # closed at the instant its bucket was handed to the engine
+            for e in entries:
+                trc.complete("queue.wait", e.arrival, launch_at,
+                             ticket=e.pending.ticket, tenant=e.tenant)
         for e in entries:
             self._server.enqueue(e.pending)
         results = self._server.flush()
@@ -335,11 +394,11 @@ class AsyncGeometryServer:
         for e, res in zip(entries, results):
             e.ticket._resolve(res, done)
             self._admission.release(e.tenant)
-            self._latencies.append(done - e.arrival)
+            self._h_latency.observe(done - e.arrival)
             if engine.serrors.is_error(res):
-                self._failed += 1
+                self._c_failed.inc()
             else:
-                self._resolved += 1
+                self._c_resolved.inc()
         self._last_resolution = done
         return len(entries)
 
@@ -414,19 +473,19 @@ class AsyncGeometryServer:
         if self._first_arrival is not None \
                 and self._last_resolution is not None:
             elapsed = self._last_resolution - self._first_arrival
-        lat = self._latencies
+        h = self._h_latency
+        settled = self._c_resolved.value + self._c_failed.value
         return {
             "admitted": ctrl.admitted,
             "queue_full_rejections": ctrl.queue_full_rejections,
             "rate_limit_rejections": ctrl.rate_limit_rejections,
             "queue_depth": ctrl.depth,
-            "max_queue_depth_seen": self._max_depth_seen,
+            "max_queue_depth_seen": int(self._g_depth.value),
             "waiting_groups": len(self._groups),
-            "resolved": self._resolved,
-            "failed": self._failed,
-            "p50_latency_s": percentile(lat, 50) if lat else 0.0,
-            "p99_latency_s": percentile(lat, 99) if lat else 0.0,
-            "max_latency_s": max(lat) if lat else 0.0,
-            "sustained_rps": (self._resolved + self._failed) / elapsed
-            if elapsed > 0 else 0.0,
+            "resolved": self._c_resolved.value,
+            "failed": self._c_failed.value,
+            "p50_latency_s": h.percentile(50) if h.count else 0.0,
+            "p99_latency_s": h.percentile(99) if h.count else 0.0,
+            "max_latency_s": h.max if h.count else 0.0,
+            "sustained_rps": settled / elapsed if elapsed > 0 else 0.0,
         }

@@ -17,13 +17,16 @@ clock -- it asks an injected ``Clock`` instead:
 
 ``percentile`` is the shared nearest-rank estimator -- the ONE
 definition, so hand-computed test values, engine telemetry, and
-benchmark rows cannot disagree about what "p99" means.
+benchmark rows cannot disagree about what "p99" means.  It lives in
+``repro.obs.metrics`` (the metrics layer's histograms consume it too)
+and is re-exported here unchanged for the serving-side callers.
 """
 from __future__ import annotations
 
 import abc
-import math
 import time
+
+from repro.obs.metrics import percentile
 
 
 class Clock(abc.ABC):
@@ -79,20 +82,4 @@ class VirtualClock(Clock):
             self.advance(seconds)
 
 
-def percentile(values, q: float) -> float:
-    """Nearest-rank percentile: the smallest element with at least
-    ``q``% of the sample at or below it (``sorted[ceil(q/100 * n)]``,
-    1-indexed).  Exact set membership -- p50 of [1, 2, 3, 4] is 2, p99
-    is 4 -- which is what makes hand-pinned telemetry tests possible;
-    interpolating estimators would make every pinned value a float
-    artifact of the interpolation rule.  Returns ``nan`` on an empty
-    sample."""
-    if not 0 <= q <= 100:
-        raise ValueError(f"percentile q must be in [0, 100], got {q}")
-    xs = sorted(values)
-    if not xs:
-        return math.nan
-    if q == 0:
-        return xs[0]
-    rank = math.ceil(q / 100.0 * len(xs))
-    return xs[rank - 1]
+__all__ = ["Clock", "MonotonicClock", "VirtualClock", "percentile"]

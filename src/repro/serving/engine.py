@@ -86,6 +86,8 @@ from repro.distributed import sharding
 from repro.kernels import (chain_apply_batch, chain_apply_batch_q,
                            chain_diag_batch, chain_diag_batch_q,
                            chain_project_batch, dispatch, opcount)
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.serving import bucketing
 from repro.serving import errors as serrors
 
@@ -117,14 +119,30 @@ from repro.serving import errors as serrors
 #:   admitted_requests      -- requests past the admission gates
 #:   queue_full_rejections  -- typed QueueFullError backpressure refusals
 #:   rate_limit_rejections  -- typed RateLimitError token-bucket refusals
-stats = {"plan_compiles": 0, "plan_hits": 0, "traces": 0, "launches": 0,
-         "requests": 0, "buckets": 0, "shards": 0,
-         "payload_points": 0, "padded_points": 0,
-         "rejected_requests": 0, "q_fallbacks": 0, "launch_failures": 0,
-         "retries": 0, "backend_fallbacks": 0, "bisections": 0,
-         "recovered_requests": 0, "failed_requests": 0,
-         "admitted_requests": 0, "queue_full_rejections": 0,
-         "rate_limit_rejections": 0}
+_STAT_KEYS = ("plan_compiles", "plan_hits", "traces", "launches",
+              "requests", "buckets", "shards",
+              "payload_points", "padded_points",
+              "rejected_requests", "q_fallbacks", "launch_failures",
+              "retries", "backend_fallbacks", "bisections",
+              "recovered_requests", "failed_requests",
+              "admitted_requests", "queue_full_rejections",
+              "rate_limit_rejections")
+
+#: the keys above that count SERVER activity (everything except the plan
+#: cache, which is module-global like the cache it counts): each
+#: GeometryServer keeps its own registry of these, and the module view
+#: is their explicit cross-server aggregate
+_SERVER_KEYS = tuple(k for k in _STAT_KEYS
+                     if k not in ("plan_compiles", "plan_hits", "traces"))
+
+#: the process-wide aggregate registry behind the module ``stats`` view
+#: (obs.export.prometheus_text(REGISTRY) is the exposition entry point)
+REGISTRY = obsm.MetricsRegistry("serving")
+
+#: back-compat module view: a MutableMapping over REGISTRY counters with
+#: the exact dict semantics the pre-obs ``stats`` dict had -- every
+#: existing ``stats["launches"]`` read, ``+=`` and reset works unchanged
+stats = obsm.StatsView(REGISTRY, _STAT_KEYS)
 
 _BATCH_PLANS: dict[tuple, "BatchPlan"] = {}
 
@@ -146,6 +164,18 @@ def reset_stats() -> None:
 def clear_plan_cache() -> None:
     """Drop all compiled batch plans (benchmarks use this for cold timings)."""
     _BATCH_PLANS.clear()
+
+
+def _count_trace(kernel: str, backend: str, dtype: str, n: int) -> None:
+    """Plan-body bookkeeping at jit-trace time (python side effects in a
+    body run only under tracing): the traces counter, plus a plan.trace
+    instant when the obs tracer is on -- retrace events are exactly the
+    shape-cache misses the compiles/hits/traces discipline pins."""
+    stats["traces"] += 1
+    trc = obst.active()
+    if trc.enabled:
+        trc.instant("plan.trace", cache="serving", kernel=kernel,
+                    backend=backend, dtype=dtype, n=n)
 
 
 class Projected(np.ndarray):
@@ -211,7 +241,8 @@ def _compile_batch_q(structure: tuple, backend: str,
 
     if kind == "diag":
         def body(folded, pts3):
-            stats["traces"] += 1
+            _count_trace("chain_diag_batch_q", backend, fmt.name,
+                         pts3.shape[0] * pts3.shape[1])
             s, t = folded
             cfg = tuning.config_for("chain_diag_batch_q", backend, fmt.name,
                                     pts3.shape[0] * pts3.shape[1])
@@ -219,7 +250,8 @@ def _compile_batch_q(structure: tuple, backend: str,
                                       backend=backend, config=cfg)
     else:
         def body(folded, pts3):
-            stats["traces"] += 1
+            _count_trace("chain_apply_batch_q", backend, fmt.name,
+                         pts3.shape[0] * pts3.shape[1])
             a, t = folded
             cfg = tuning.config_for("chain_apply_batch_q", backend, fmt.name,
                                     pts3.shape[0] * pts3.shape[1])
@@ -240,7 +272,8 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
     # every config bit-identical (see core.transform_chain._compile).
     if kind == "diag":
         def body(folded, pts3):
-            stats["traces"] += 1
+            _count_trace("chain_diag_batch", backend, str(pts3.dtype),
+                         pts3.shape[0] * pts3.shape[1])
             s, t = folded
             cfg = tuning.config_for("chain_diag_batch", backend,
                                     str(pts3.dtype),
@@ -248,7 +281,8 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
             return chain_diag_batch(pts3, s, t, backend=backend, config=cfg)
     elif kind == "matrix":
         def body(folded, pts3):
-            stats["traces"] += 1
+            _count_trace("chain_apply_batch", backend, str(pts3.dtype),
+                         pts3.shape[0] * pts3.shape[1])
             a, t = folded
             cfg = tuning.config_for("chain_apply_batch", backend,
                                     str(pts3.dtype),
@@ -256,7 +290,8 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
             return chain_apply_batch(pts3, a, t, backend=backend, config=cfg)
     else:
         def body(folded, pts3):
-            stats["traces"] += 1
+            _count_trace("chain_project_batch", backend, str(pts3.dtype),
+                         pts3.shape[0] * pts3.shape[1])
             h, lo, hi = folded
             cfg = tuning.config_for("chain_project_batch", backend,
                                     str(pts3.dtype),
@@ -277,13 +312,22 @@ def get_batch_plan(structure: tuple, backend: str,
     distinct dtype would be)."""
     key = (structure, backend, qname)
     plan = _BATCH_PLANS.get(key)
+    trc = obst.active()
     if plan is None:
         stats["plan_compiles"] += 1
+        if trc.enabled:
+            trc.instant("plan.compile", cache="serving",
+                        structure=_structure_tag(structure),
+                        backend=backend, q=qname)
         plan = _compile_batch_q(structure, backend, qname) \
             if qname is not None else _compile_batch(structure, backend)
         _BATCH_PLANS[key] = plan
     else:
         stats["plan_hits"] += 1
+        if trc.enabled:
+            trc.instant("plan.hit", cache="serving",
+                        structure=_structure_tag(structure),
+                        backend=backend, q=qname)
     return plan
 
 
@@ -351,6 +395,7 @@ class _Launch:
     packed: np.ndarray
     reqs: list
     report: "BucketReport"
+    track: str = ""                # trace track: the bucket signature
 
 
 @dataclasses.dataclass
@@ -385,6 +430,18 @@ class BucketReport:
 def _structure_tag(structure: tuple) -> str:
     dim, kinds = structure
     return f"{dim}D:" + "".join(k for k, _ in kinds)
+
+
+def _bucket_track(structure: tuple, backend: str, dt: str,
+                  lpad: int) -> str:
+    """The trace track (Perfetto timeline) name of one plan bucket."""
+    return f"{_structure_tag(structure)}|{backend}|{dt}|{lpad}"
+
+
+#: plan kind -> the batch kernel whose tuning-cache entry a launch
+#: consults (the launch span's ``config`` annotation names its source)
+_KERNEL_BY_KIND = {"diag": "chain_diag_batch", "matrix": "chain_apply_batch",
+                   "projective": "chain_project_batch"}
 
 
 class GeometryServer:
@@ -427,6 +484,17 @@ class GeometryServer:
         #: shard cap: a bucket whose packed B*L exceeds this splits into
         #: multiple launches along the batch axis
         self.max_points_per_launch = max_points_per_launch
+        #: this server's own typed registry: every server-scoped counter
+        #: below is dual-written here and into the module aggregate
+        #: (``stats``), so two servers in one process stop drifting into
+        #: each other's numbers -- per-server truth lives here, and the
+        #: module view is the EXPLICIT aggregate
+        #: (``tests/test_obs.py::test_two_server_stats``); labeled
+        #: bucket dimensions (plan kind, backend, dtype/qformat, size
+        #: class) live here too
+        self.metrics = obsm.MetricsRegistry("server")
+        for k in _SERVER_KEYS:
+            self.metrics.counter(k)
         self._pending: list[_Pending] = []
         self._ticket = 0
         self.last_report: list[BucketReport] = []
@@ -438,6 +506,14 @@ class GeometryServer:
         #: (recovery launches included: recovery counts into the same
         #: BucketReport objects).  Cleared by ``reset_stats()``.
         self.reports: list[BucketReport] = []
+
+    def _bump(self, name: str, n: int = 1) -> None:
+        """Count one server-scoped event: this server's registry AND the
+        module aggregate move together (dual-write keeps the historical
+        reset semantics -- ``reset_stats()`` zeroes the aggregate without
+        erasing any live server's own history)."""
+        stats[name] += n
+        self.metrics.counter(name).inc(n)
 
     # -- request intake ------------------------------------------------------
 
@@ -476,11 +552,24 @@ class GeometryServer:
         reused."""
         ticket = self._ticket
         self._ticket += 1
+        trc = obst.active()
+        sid = trc.begin("request.validate", ticket=ticket) \
+            if trc.enabled else None
         try:
-            return self._validate(chain, points, qformat, ticket)
-        except errors.RequestError:
-            stats["rejected_requests"] += 1
+            p = self._validate(chain, points, qformat, ticket)
+        except errors.RequestError as e:
+            self._bump("rejected_requests")
+            if sid is not None:
+                trc.end(sid, outcome="rejected",
+                        code=getattr(e, "code", type(e).__name__))
             raise
+        if sid is not None:
+            trc.end(sid, outcome="admitted",
+                    kind=tc.plan_kind_of(chain.structure) if len(chain)
+                    else "identity",
+                    q=p.qformat.name if p.qformat is not None else None,
+                    points=p.n)
+        return p
 
     def enqueue(self, p: "_Pending") -> int:
         """Queue a ``validate``d entry for the next flush; returns its
@@ -495,8 +584,12 @@ class GeometryServer:
         recovery launches included) restarts from a consistent origin.
         The module-level ``reset_stats`` alone cannot give that: it
         zeroes the global counters but leaves every server's report
-        history counting launches from before the reset."""
+        history counting launches from before the reset.  This server's
+        own registry resets too (other servers' registries are theirs
+        and stay untouched -- which is exactly why the aggregate and the
+        per-server registries are separate objects)."""
         reset_stats()
+        self.metrics.reset()
         self.reports = []
         self.last_report = []
 
@@ -550,7 +643,7 @@ class GeometryServer:
                 # int16 callers still get int16 back (requantised), so the
                 # submit contract holds; only the arithmetic substrate
                 # changed -- the same trade the backend ladder makes.
-                stats["q_fallbacks"] += 1
+                self._bump("q_fallbacks")
                 q_fallback = True
                 if not dequant:
                     pts = fmt.dequantize(pts)
@@ -661,18 +754,41 @@ class GeometryServer:
         return self._stage(stacked, packed)
 
     def _count_launch(self, plan: BatchPlan, lpad: int, reqs: list,
-                      packed: np.ndarray, report: BucketReport) -> None:
+                      packed: np.ndarray, report: BucketReport,
+                      rung: int = 0, attempt: int = 0,
+                      track: str | None = None) -> None:
         """Bookkeeping for one DISPATCHED launch (called after the
-        injector gate: a blocked attempt never reached the device)."""
+        injector gate: a blocked attempt never reached the device).
+        This is the ONE place ``stats["launches"]`` moves, and the one
+        place launch trace events come from, so the span-count invariant
+        ``count("launch") == stats["launches"]`` holds by construction
+        (``tests/test_obs.py`` pins it)."""
         # the _q suffix keeps the lanes separately countable, same
         # discipline as TransformChain._record_fused
+        nbytes = opcount.packed_chain_bytes(
+            len(reqs), lpad, plan.dim,
+            itemsize=packed.dtype.itemsize, kind=plan.kind)
         opcount.record(
             f"serve_bucket_{plan.kind}{'_q' if plan.qformat else ''}",
-            opcount.packed_chain_bytes(
-                len(reqs), lpad, plan.dim,
-                itemsize=packed.dtype.itemsize, kind=plan.kind))
-        stats["launches"] += 1
+            nbytes)
+        self._bump("launches")
         report.launches += 1
+        trc = obst.active()
+        if trc.enabled:
+            # per-attempt annotation: backend rung, plan kind, autotune
+            # config source, and the opcount HBM bytes this launch moves
+            dtype = plan.qformat if plan.qformat is not None \
+                else str(packed.dtype)
+            kernel = _KERNEL_BY_KIND[plan.kind] \
+                + ("_q" if plan.qformat else "")
+            cfg = tuning.config_for(kernel, plan.backend, dtype,
+                                    len(reqs) * lpad)
+            trc.instant(
+                "launch", tickets=tuple(r.ticket for r in reqs),
+                track=track, backend=plan.backend, kind=plan.kind,
+                q=plan.qformat, rung=rung, attempt=attempt,
+                rows=len(reqs), lpad=lpad, hbm_bytes=nbytes,
+                config=cfg.source)
 
     # -- flush: dispatch, unpack, recover ------------------------------------
 
@@ -689,6 +805,9 @@ class GeometryServer:
         returned list always lines up 1:1 with submissions."""
         pending, self._pending = self._pending, []
         backend = dispatch.resolve(self.backend)
+        trc = obst.active()
+        fsid = trc.begin("flush", requests=len(pending)) \
+            if trc.enabled else None
         # grid lookup keyed by this flush's traffic scale (largest request
         # length): grids are tuned per scale, so the lookup must say which
         # scale is being served
@@ -701,6 +820,9 @@ class GeometryServer:
         for p in pending:
             if len(p.chain) == 0:
                 results[p.ticket] = p.points   # identity passthrough
+                if trc.enabled:
+                    trc.instant("request.resolve", ticket=p.ticket,
+                                outcome="identity")
             else:                              # (empty sets reject at submit)
                 buckets.setdefault(self._bucket_key(p, backend), []).append(p)
 
@@ -710,8 +832,20 @@ class GeometryServer:
         for (structure, bk, _dt, lpad), reqs in buckets.items():
             qname = reqs[0].qformat.name if reqs[0].qformat is not None \
                 else None
+            track = _bucket_track(structure, bk, _dt, lpad)
+            bsid = trc.begin("bucket.assemble", track=track,
+                             tickets=tuple(r.ticket for r in reqs),
+                             rows=len(reqs), lpad=lpad) \
+                if trc.enabled else None
             plan = get_batch_plan(structure, bk, qname)
-            stacked, packed = self._pack(reqs, lpad, plan)
+            if trc.enabled:
+                psid = trc.begin("bucket.pack", track=track,
+                                 rows=len(reqs), lpad=lpad,
+                                 q=plan.qformat)
+                stacked, packed = self._pack(reqs, lpad, plan)
+                trc.end(psid)
+            else:
+                stacked, packed = self._pack(reqs, lpad, plan)
             chunks = self._chunks(len(reqs), lpad)
             payload = sum(r.n for r in reqs)
             report = BucketReport(
@@ -725,13 +859,26 @@ class GeometryServer:
                     structure=structure, qname=qname, backend=bk, lpad=lpad,
                     plan=plan,
                     stacked=jax.tree.map(lambda x: x[sl], stacked),
-                    packed=packed[sl], reqs=reqs[sl], report=report))
+                    packed=packed[sl], reqs=reqs[sl], report=report,
+                    track=track))
             self.last_report.append(report)
             self.reports.append(report)
-            stats["buckets"] += 1
-            stats["shards"] += len(chunks) - 1 if len(chunks) > 1 else 0
-            stats["payload_points"] += payload
-            stats["padded_points"] += len(reqs) * lpad
+            self._bump("buckets")
+            self._bump("shards",
+                       len(chunks) - 1 if len(chunks) > 1 else 0)
+            self._bump("payload_points", payload)
+            self._bump("padded_points", len(reqs) * lpad)
+            # the labeled serving dimensions (plan kind, backend,
+            # dtype/qformat, padded size class) -- per-server only: the
+            # aggregate view stays the flat counter set it always was
+            self.metrics.counter(
+                "bucket_requests",
+                labels=("kind", "backend", "dtype", "size_class"),
+            ).labels(kind=plan.kind, backend=bk, dtype=_dt,
+                     size_class=lpad).inc(len(reqs))
+            if bsid is not None:
+                trc.end(bsid, kind=plan.kind, shards=len(chunks),
+                        payload_points=payload)
 
         # Phase 1 -- optimistic double-buffered dispatch (frame-buffer
         # set 0 / set 1): stage the first launch, then keep one launch
@@ -747,6 +894,8 @@ class GeometryServer:
             except Exception as e:       # staging failure is a launch failure
                 return _FailedLaunch(e)
 
+        dsid = trc.begin("flush.dispatch", launches=len(launches)) \
+            if trc.enabled else None
         outs: list = []
         staged = _stage_first(launches[0]) if launches else None
         for k, L in enumerate(launches):
@@ -755,34 +904,58 @@ class GeometryServer:
                     raise staged.err
                 dev_params, dev_points = staged
                 self._check_injected(L.reqs, 0, 0)
-                self._count_launch(L.plan, L.lpad, L.reqs, L.packed, L.report)
+                self._count_launch(L.plan, L.lpad, L.reqs, L.packed, L.report,
+                                   rung=0, attempt=0, track=L.track)
                 outs.append(L.plan.fn(dev_params, dev_points))  # async: set 0
             except Exception as e:
                 outs.append(_FailedLaunch(e))
             if k + 1 < len(launches):
                 staged = _stage_first(launches[k + 1])          # async: set 1
+        if dsid is not None:
+            trc.end(dsid)
 
         # Phase 2 -- unpack with capture: materialisation is where async
         # device errors (and injected corruption) actually surface, so
         # each launch unpacks under its own try.
+        usid = trc.begin("flush.unpack") if trc.enabled else None
         failed: list[tuple[_Launch, Exception]] = []
         for L, out in zip(launches, outs):
+            lsid = trc.begin("unpack", track=L.track,
+                             tickets=tuple(r.ticket for r in L.reqs)) \
+                if trc.enabled else None
             if isinstance(out, _FailedLaunch):
-                stats["launch_failures"] += 1
+                self._bump("launch_failures")
                 failed.append((L, out.err))
+                if lsid is not None:
+                    trc.end(lsid, outcome="failed",
+                            error=type(out.err).__name__)
                 continue
             try:
                 self._unpack(L.plan, L.reqs, out, results)
             except Exception as e:
-                stats["launch_failures"] += 1
+                self._bump("launch_failures")
                 failed.append((L, e))
+                if lsid is not None:
+                    trc.end(lsid, outcome="failed", error=type(e).__name__)
+            else:
+                if lsid is not None:
+                    trc.end(lsid, outcome="ok")
+        if usid is not None:
+            trc.end(usid, failed=len(failed))
 
         # Phase 3 -- sequential recovery of the failed groups (the rare
         # path; overlap no longer matters, determinism and containment do).
-        for L, err in failed:
-            self._recover(L, list(L.reqs), err, results)
+        if failed:
+            rsid = trc.begin("flush.recover", groups=len(failed)) \
+                if trc.enabled else None
+            for L, err in failed:
+                self._recover(L, list(L.reqs), err, results)
+            if rsid is not None:
+                trc.end(rsid)
 
-        stats["requests"] += len(pending)
+        self._bump("requests", len(pending))
+        if fsid is not None:
+            trc.end(fsid, buckets=len(buckets), launches=len(launches))
         return [results[p.ticket] for p in pending]
 
     def _unpack(self, plan: BatchPlan, reqs: list, out,
@@ -795,6 +968,7 @@ class GeometryServer:
         buffer for as long as the caller keeps any one result.
         Projective launches return (points, mask); their results carry
         the per-point cull mask as ``Projected.mask``."""
+        trc = obst.active()
         if plan.kind == "projective":
             host, mask = np.asarray(out[0]), np.asarray(out[1])
             for i, r in enumerate(reqs):
@@ -802,6 +976,9 @@ class GeometryServer:
                     np.array(host[i, :r.n].reshape(r.points.shape)),
                     np.array(mask[i, :r.n]
                              .reshape(r.points.shape[:-1])))
+                if trc.enabled:
+                    trc.instant("request.resolve", ticket=r.ticket,
+                                outcome="ok")
             return
         host = np.asarray(out)
         if self.fault_config.validate_outputs and plan.qformat is None \
@@ -824,6 +1001,9 @@ class GeometryServer:
                 # submit contract (int16 in -> int16 out) holds
                 res = r.requant.quantize(res)
             results[r.ticket] = res
+            if trc.enabled:
+                trc.instant("request.resolve", ticket=r.ticket,
+                            outcome="ok")
 
     def _recover(self, L: _Launch, reqs: list, err: Exception,
                  results: dict, depth: int = 0) -> None:
@@ -841,6 +1021,13 @@ class GeometryServer:
         with a name, and nothing is silently dropped."""
         cfg = self.fault_config
         rungs = dispatch.fallback_ladder(L.backend)
+        trc = obst.active()
+        rtrack = f"recovery:{L.track}" if L.track else "recovery"
+        gsid = trc.begin("recover", track=rtrack,
+                         tickets=tuple(r.ticket for r in reqs),
+                         depth=depth, rows=len(reqs),
+                         error=type(err).__name__) \
+            if trc.enabled else None
         # at depth 0 the optimistic dispatch already burned attempt 0 of
         # rung 0; bisected halves start their ladder fresh
         n_failures = 1 if depth == 0 else 0
@@ -853,31 +1040,48 @@ class GeometryServer:
                     time.sleep(min(cfg.backoff_cap_s, cfg.backoff_base_s *
                                    cfg.backoff_factor ** (n_failures - 1)))
                 if attempt > 0:
-                    stats["retries"] += 1
+                    self._bump("retries")
                     L.report.retries += 1
+                asid = trc.begin("recover.attempt", track=rtrack,
+                                 rung=rung, attempt=attempt) \
+                    if trc.enabled else None
                 try:
                     stacked, packed = self._pack(reqs, L.lpad, plan)
                     dev = self._stage_attempt(plan, stacked, packed, reqs,
                                               ri, attempt)
                     self._check_injected(reqs, ri, attempt)
-                    self._count_launch(plan, L.lpad, reqs, packed, L.report)
+                    self._count_launch(plan, L.lpad, reqs, packed, L.report,
+                                       rung=ri, attempt=attempt, track=rtrack)
                     out = plan.fn(*dev)
                     self._unpack(plan, reqs, out, results)
                 except Exception as e:
-                    stats["launch_failures"] += 1
+                    self._bump("launch_failures")
                     err = e
                     n_failures += 1
+                    if asid is not None:
+                        trc.end(asid, outcome="failed",
+                                error=type(e).__name__)
                     continue
+                if asid is not None:
+                    trc.end(asid, outcome="ok")
                 if ri > 0:
-                    stats["backend_fallbacks"] += 1
+                    self._bump("backend_fallbacks")
                     L.report.backend_fallbacks += 1
                     L.report.final_backend = rung
-                stats["recovered_requests"] += len(reqs)
+                self._bump("recovered_requests", len(reqs))
                 L.report.recovered_requests += len(reqs)
+                if gsid is not None:
+                    trc.end(gsid, outcome="recovered", rung=rung)
                 return
         if len(reqs) > 1:
-            stats["bisections"] += 1
+            self._bump("bisections")
             L.report.bisections += 1
+            if trc.enabled:
+                trc.instant("recover.bisect", track=rtrack,
+                            tickets=tuple(r.ticket for r in reqs),
+                            depth=depth, rows=len(reqs))
+            if gsid is not None:
+                trc.end(gsid, outcome="bisected")
             mid = len(reqs) // 2
             self._recover(L, reqs[:mid], err, results, depth + 1)
             self._recover(L, reqs[mid:], err, results, depth + 1)
@@ -887,6 +1091,15 @@ class GeometryServer:
             f"launch failed on every rung of {rungs} "
             f"(x{cfg.max_launch_attempts} attempts each): {err}",
             ticket=r.ticket)
+        if trc.enabled and trc.recorder is not None:
+            # the event window that led here rides on the resolution --
+            # a chaos failure is debuggable from the error object alone
+            resolution.flight = trc.recorder.snapshot()
         results[r.ticket] = resolution
-        stats["failed_requests"] += 1
+        self._bump("failed_requests")
         L.report.failed_requests += 1
+        if trc.enabled:
+            trc.instant("request.resolve", ticket=r.ticket,
+                        outcome="launch-error")
+        if gsid is not None:
+            trc.end(gsid, outcome="failed")

@@ -38,7 +38,10 @@ import numpy as np
 
 from repro import quantize
 from repro.core import transform_chain as tc
+from repro.obs import recorder as obsrec
+from repro.obs import trace as obst
 from repro.serving import engine, workload
+from repro.serving.clock import VirtualClock
 from repro.serving.errors import InjectedFault, LaunchError, RequestError
 
 #: role-draw salt: keeps the injector's stream disjoint from every other
@@ -191,6 +194,11 @@ class ChaosReport:
     injected_launch_faults: int
     injected_corruptions: int
     elapsed_s: float
+    #: per-recovery-ladder flight-recorder post-mortems: one entry per
+    #: recovery track, each the span/event dicts of that ladder's walk
+    #: (deterministic under the soak's auto-installed virtual-clock
+    #: tracer) -- a chaos failure in CI is debuggable from the report
+    postmortems: list = dataclasses.field(default_factory=list)
 
     @property
     def recovered_rps(self) -> float:
@@ -203,6 +211,7 @@ class ChaosReport:
         d = dataclasses.asdict(self)
         d.pop("elapsed_s")
         d.pop("backend")
+        d.pop("postmortems")
         return d
 
 
@@ -265,7 +274,43 @@ def run_chaos_soak(seed: int = 0, n_requests: int = 64, *,
     time the serving path alone) every resolved result is checked
     against its per-request ``apply`` oracle and every failure slot must
     be a ``LaunchError`` naming its own ticket; ``lost`` counts
-    submissions with neither, and the invariant is ``lost == 0``."""
+    submissions with neither, and the invariant is ``lost == 0``.
+
+    Runs traced: if no tracer is installed, the soak installs its own
+    (virtual clock at 0, so recovery post-mortems are a pure function of
+    the seed) for the duration and attaches per-ladder flight-recorder
+    windows to ``ChaosReport.postmortems``."""
+    if not obst.active().enabled:
+        tracer = obst.Tracer(clock=VirtualClock(),
+                             recorder=obsrec.FlightRecorder(512))
+        with obst.installed(tracer):
+            return _chaos_soak_traced(
+                seed, n_requests, backend=backend, q_fraction=q_fraction,
+                qformat=qformat, malformed_every=malformed_every,
+                flaky_rate=flaky_rate, backend_rate=backend_rate,
+                corrupt_rate=corrupt_rate, poison_rate=poison_rate,
+                fault_config=fault_config, verify=verify)
+    return _chaos_soak_traced(
+        seed, n_requests, backend=backend, q_fraction=q_fraction,
+        qformat=qformat, malformed_every=malformed_every,
+        flaky_rate=flaky_rate, backend_rate=backend_rate,
+        corrupt_rate=corrupt_rate, poison_rate=poison_rate,
+        fault_config=fault_config, verify=verify)
+
+
+def _recovery_postmortems(trc) -> list:
+    """Group the trace's recovery-track events into one post-mortem per
+    ladder (insertion order = first failure order, so deterministic)."""
+    tracks: dict = {}
+    for s in trc.spans:
+        if s.track is not None and str(s.track).startswith("recovery"):
+            tracks.setdefault(s.track, []).append(s.as_dict())
+    return [{"track": t, "events": evs} for t, evs in tracks.items()]
+
+
+def _chaos_soak_traced(seed, n_requests, *, backend, q_fraction, qformat,
+                       malformed_every, flaky_rate, backend_rate,
+                       corrupt_rate, poison_rate, fault_config, verify):
     cfg = fault_config or engine.FaultConfig()
     srv = engine.GeometryServer(
         backend=backend, fault_config=cfg,
@@ -348,4 +393,5 @@ def run_chaos_soak(seed: int = 0, n_requests: int = 64, *,
         q_fallbacks=delta["q_fallbacks"],
         injected_launch_faults=srv.injector.injected_launch_faults,
         injected_corruptions=srv.injector.injected_corruptions,
-        elapsed_s=elapsed)
+        elapsed_s=elapsed,
+        postmortems=_recovery_postmortems(obst.active()))

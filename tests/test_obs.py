@@ -1,0 +1,557 @@
+"""Observability-layer tests: span-tree tracer semantics, the typed
+metrics registry and its back-compat ``StatsView``, Chrome-trace /
+Prometheus export determinism, the flight recorder, per-server counter
+isolation, and the span-tree completeness invariants under seeded fault
+injection (every submitted ticket's tree accounts for its outcome --
+success, rejection, recovery, or bisection -- and the ``launch``
+instant count equals ``stats["launches"]`` exactly).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs, serving
+from repro.core import transform_chain as tc
+from repro.serving import engine, faults
+from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
+from repro.serving.clock import VirtualClock
+
+RNG = np.random.default_rng(80)
+
+
+def _fresh(**kw):
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    return serving.GeometryServer(**kw)
+
+
+def _cfg(**kw):
+    kw.setdefault("backoff_base_s", 0.0)
+    return engine.FaultConfig(**kw)
+
+
+def _chain2():
+    return tc.TransformChain.identity(2).translate(0.5, -0.25).scale(1.5)
+
+
+def _pts(n=8, dim=2):
+    return RNG.uniform(-1, 1, (n, dim)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_begin_end_nest_and_stack(self):
+        clk = VirtualClock()
+        trc = obs.Tracer(clock=clk)
+        a = trc.begin("outer")
+        clk.advance(1.0)
+        b = trc.begin("inner", ticket=7)
+        clk.advance(0.5)
+        trc.end(b)
+        trc.end(a)
+        outer, inner = trc.spans[0], trc.spans[1]
+        assert outer.name == "outer" and outer.t0 == 0.0 and outer.t1 == 1.5
+        assert inner.parent == outer.sid and inner.duration == 0.5
+        assert inner.ticket == 7
+
+    def test_end_merges_attrs_and_late_ticket(self):
+        trc = obs.Tracer(clock=VirtualClock())
+        sid = trc.begin("s", a=1)
+        trc.end(sid, ticket=3, b=2)
+        (s,) = trc.spans
+        assert s.ticket == 3 and s.attrs == {"a": 1, "b": 2}
+
+    def test_instant_and_complete(self):
+        trc = obs.Tracer(clock=VirtualClock(start=2.0))
+        trc.instant("mark", ticket=1, k="v")
+        trc.complete("retro", 0.25, 0.75, ticket=1)
+        mark, retro = trc.spans
+        assert mark.instant and mark.t0 == 2.0
+        assert not retro.instant and (retro.t0, retro.t1) == (0.25, 0.75)
+        assert trc.n_events == 2 and trc.n_spans == 1
+
+    def test_span_contextmanager_closes_on_error(self):
+        trc = obs.Tracer(clock=VirtualClock())
+        with pytest.raises(RuntimeError):
+            with trc.span("work", ticket=5):
+                raise RuntimeError("boom")
+        (s,) = trc.spans
+        assert s.t1 is not None and s.ticket == 5
+
+    def test_span_tree_reconstructs_per_ticket(self):
+        trc = obs.Tracer(clock=VirtualClock())
+        a = trc.begin("shared")              # untagged: drops out of trees
+        b = trc.begin("request.validate", ticket=1)
+        trc.end(b)
+        c = trc.begin("bucket", tickets=(1, 2))
+        trc.instant("launch", tickets=(1, 2))
+        trc.end(c)
+        trc.end(a)
+        roots = trc.span_tree(1)
+        names = [n.name for n in roots]
+        assert names == ["request.validate", "bucket"]
+        # the launch instant re-nests under the bucket span, not the
+        # uncollected "shared" ancestor
+        assert [ch.name for ch in roots[1].children] == ["launch"]
+        assert trc.span_tree(3) == []
+
+    def test_install_and_restore(self):
+        trc = obs.Tracer(clock=VirtualClock())
+        assert not obs.active().enabled
+        with obs.installed(trc):
+            assert obs.active() is trc
+            inner = obs.Tracer(clock=VirtualClock())
+            with obs.installed(inner):
+                assert obs.active() is inner
+            assert obs.active() is trc
+        assert not obs.active().enabled
+
+    def test_null_tracer_is_inert(self):
+        n = obs.NullTracer()
+        assert not n.enabled and n.spans == ()
+        sid = n.begin("x")
+        n.end(sid)
+        n.instant("y")
+        with n.span("z"):
+            pass
+        assert n.spans == ()
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + back-compat views
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_gauge_histogram(self):
+        reg = obs.MetricsRegistry("t")
+        c = reg.counter("hits")
+        c.inc()
+        c.inc(4)
+        g = reg.gauge("depth")
+        g.track_max(3)
+        g.track_max(1)
+        h = reg.histogram("lat")
+        for v in (1.0, 2.0, 3.0, 4.0):
+            h.observe(v)
+        assert reg.value("hits") == 5 and reg.value("depth") == 3
+        assert h.count == 4 and h.sum == 10.0 and h.max == 4.0
+        assert h.percentile(50) == 2.0
+
+    def test_labels_fan_out(self):
+        reg = obs.MetricsRegistry()
+        fam = reg.counter("req", labels=("tenant",))
+        fam.labels(tenant="a").inc(2)
+        fam.labels(tenant="b").inc()
+        assert reg.value("req", tenant="a") == 2
+        assert reg.value("req", tenant="b") == 1
+        with pytest.raises(ValueError):
+            fam.labels(nope="x")
+
+    def test_redeclare_must_be_consistent(self):
+        reg = obs.MetricsRegistry()
+        reg.counter("n")
+        assert reg.counter("n") is not None    # same family: fine
+        with pytest.raises(ValueError):
+            reg.gauge("n")
+
+    def test_reset_zeroes_in_place(self):
+        reg = obs.MetricsRegistry()
+        c = reg.counter("n")
+        c.inc(9)
+        reg.reset()
+        assert c.value == 0 and reg.counter("n") is c
+
+    def test_stats_view_is_a_mutable_mapping(self):
+        reg = obs.MetricsRegistry()
+        view = obs.StatsView(reg, ("a", "b"))
+        view["a"] += 2
+        view["b"] = 5
+        assert dict(view) == {"a": 2, "b": 5}
+        assert view == {"a": 2, "b": 5} and len(view) == 2
+        assert sorted(view) == ["a", "b"]
+        with pytest.raises(KeyError):
+            view["nope"] = 1
+
+    def test_percentile_reexported_by_clock(self):
+        from repro.serving.clock import percentile
+        assert percentile is obs.percentile
+        assert percentile([3.0, 1.0, 2.0], 50) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+class TestExport:
+    def _tracer(self):
+        clk = VirtualClock()
+        trc = obs.Tracer(clock=clk)
+        sid = trc.begin("flush")
+        b = trc.begin("bucket.assemble", track="2D:TS|ref|<f4|8",
+                      tickets=(0, 1))
+        clk.advance(0.001)
+        trc.instant("launch", track="2D:TS|ref|<f4|8", rows=2)
+        trc.end(b)
+        trc.end(sid)
+        return trc
+
+    def test_chrome_events_shape(self):
+        evs = obs.chrome_trace_events(self._tracer())
+        meta = [e for e in evs if e["ph"] == "M"]
+        assert [m["args"]["name"] for m in meta] == \
+            ["serve", "2D:TS|ref|<f4|8"]     # first-seen track order
+        x = [e for e in evs if e["ph"] == "X"]
+        i = [e for e in evs if e["ph"] == "i"]
+        assert len(x) == 2 and len(i) == 1 and i[0]["s"] == "t"
+        assert x[0]["tid"] == 0 and x[1]["tid"] == 1
+
+    def test_dump_is_byte_deterministic(self, tmp_path):
+        p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+        obs.dump_chrome_trace(self._tracer(), str(p1))
+        obs.dump_chrome_trace(self._tracer(), str(p2))
+        assert p1.read_bytes() == p2.read_bytes()
+        doc = json.loads(p1.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+
+    def test_prometheus_text_sorted_and_typed(self):
+        reg = obs.MetricsRegistry("srv")
+        reg.counter("zeta").inc(2)
+        reg.counter("alpha", help="first").inc()
+        fam = reg.counter("by_tenant", labels=("tenant",))
+        fam.labels(tenant="b").inc()
+        fam.labels(tenant="a").inc(3)
+        h = reg.histogram("lat")
+        h.observe(0.5)
+        text = obs.prometheus_text(reg)
+        lines = text.splitlines()
+        assert "# HELP srv_alpha first" in lines
+        assert lines.index("# TYPE srv_alpha counter") < \
+            lines.index("# TYPE srv_zeta counter")
+        # label children sort by value; histograms render as summaries
+        ia = lines.index('srv_by_tenant{tenant="a"} 3')
+        ib = lines.index('srv_by_tenant{tenant="b"} 1')
+        assert ia < ib
+        assert "# TYPE srv_lat summary" in lines
+        assert 'srv_lat{quantile="0.5"} 0.5' in lines
+        assert "srv_lat_count 1" in lines
+        assert obs.prometheus_text(reg) == text    # deterministic
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+class TestFlightRecorder:
+    def test_bounded_window(self):
+        rec = obs.FlightRecorder(capacity=4)
+        trc = obs.Tracer(clock=VirtualClock(), recorder=rec)
+        for k in range(10):
+            trc.instant("e", k=k)
+        assert len(rec) == 4 and rec.recorded == 10 and rec.dropped == 6
+        snap = rec.snapshot()
+        assert [e["attrs"]["k"] for e in snap] == [6, 7, 8, 9]
+        rec.clear()
+        assert len(rec) == 0 and rec.recorded == 0
+
+    def test_capacity_validates(self):
+        with pytest.raises(ValueError):
+            obs.FlightRecorder(capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# engine tracing: span trees, exact launch accounting, zero steering
+# ---------------------------------------------------------------------------
+
+class TestEngineTracing:
+    def test_launch_instants_equal_launch_counter(self):
+        srv = _fresh(backend="ref")
+        trc = obs.Tracer(clock=VirtualClock())
+        with obs.installed(trc):
+            for _ in range(6):
+                srv.submit(_chain2(), _pts(int(RNG.integers(4, 24))))
+            srv.submit(tc.TransformChain.identity(2), _pts(5))
+            srv.flush()
+        assert trc.count("launch") == serving.stats["launches"] > 0
+        assert trc.count("request.resolve") == 7
+
+    def test_every_ticket_tree_complete_on_success(self):
+        srv = _fresh(backend="ref")
+        trc = obs.Tracer(clock=VirtualClock())
+        with obs.installed(trc):
+            tickets = [srv.submit(_chain2(), _pts(8)) for _ in range(4)]
+            tickets.append(srv.submit(tc.TransformChain.identity(2),
+                                      _pts(3)))
+            srv.flush()
+        for t in tickets:
+            names = [s.name for root in trc.span_tree(t)
+                     for s in root.walk()]
+            assert "request.validate" in names
+            assert "request.resolve" in names
+
+    def test_rejection_tree(self):
+        srv = _fresh(backend="ref")
+        trc = obs.Tracer(clock=VirtualClock())
+        with obs.installed(trc):
+            with pytest.raises(serving.RequestError):
+                srv.submit(_chain2(), np.zeros((0, 2), np.float32))
+        (s,) = trc.spans_for(trc.tickets_seen()[0])
+        assert s.name == "request.validate"
+        assert s.attrs["outcome"] == "rejected"
+        assert s.attrs["code"] == "empty"
+
+    def test_tracing_never_steers_the_counters(self):
+        # identical seeded workload, untraced vs traced: every counter
+        # bit-identical (instrumentation observes, never steers)
+        def serve():
+            srv = _fresh(backend="ref")
+            rng = np.random.default_rng(7)
+            for _ in range(12):
+                n = int(rng.integers(2, 40))
+                pts = rng.uniform(-1, 1, (n, 2)).astype(np.float32)
+                srv.submit(_chain2(), pts)
+            srv.flush()
+            return dict(serving.stats)
+
+        untraced = serve()
+        trc = obs.Tracer(clock=VirtualClock())
+        with obs.installed(trc):
+            traced = serve()
+        assert untraced == traced
+        assert trc.n_events > 0
+
+    def test_bucket_tracks_and_labeled_dimensions(self):
+        srv = _fresh(backend="ref")
+        trc = obs.Tracer(clock=VirtualClock())
+        with obs.installed(trc):
+            srv.submit(_chain2(), _pts(8))
+            srv.flush()
+        tracks = {s.track for s in trc.spans if s.track}
+        assert len(tracks) == 1
+        track = tracks.pop()
+        assert "ref" in track                 # structure|backend|dtype|lpad
+        # the per-server labeled counter saw the bucket's rows
+        kind, backend, dt, lpad = None, "ref", None, None
+        for s in trc.spans:
+            if s.name == "bucket.assemble":
+                kind = s.attrs["kind"]
+                lpad = str(s.attrs["lpad"])
+        dt = track.split("|")[2]
+        assert srv.metrics.value("bucket_requests", kind=kind,
+                                 backend=backend, dtype=dt,
+                                 size_class=lpad) == 1
+
+
+class TestSpanTreesUnderFaults:
+    def _traced_faulty(self, inj, n=6, **srv_kw):
+        srv = _fresh(backend="ref", fault_config=_cfg(max_launch_attempts=2),
+                     injector=inj, **srv_kw)
+        rec = obs.FlightRecorder(capacity=128)
+        trc = obs.Tracer(clock=VirtualClock(), recorder=rec)
+        with obs.installed(trc):
+            tickets = [srv.submit(_chain2(), _pts(8)) for _ in range(n)]
+            results = srv.flush()
+        return srv, trc, tickets, results
+
+    def test_recovery_tree_for_flaky_ticket(self):
+        inj = faults.FaultInjector(flaky_tickets=frozenset({0}),
+                                   flaky_attempts=1)
+        srv, trc, tickets, results = self._traced_faulty(inj)
+        names = [s.name for root in trc.span_tree(0)
+                 for s in root.walk()]
+        assert "recover" in names and "request.resolve" in names
+        rec_spans = [s for s in trc.spans_for(0) if s.name == "recover"]
+        assert rec_spans[0].attrs["outcome"] == "recovered"
+        assert str(rec_spans[0].track).startswith("recovery:")
+        assert trc.count("launch") == serving.stats["launches"]
+
+    def test_bisection_and_terminal_failure_trees(self):
+        inj = faults.FaultInjector(poison_tickets=frozenset({2}))
+        srv, trc, tickets, results = self._traced_faulty(inj)
+        assert trc.count("recover.bisect") == serving.stats["bisections"] > 0
+        # the poisoned ticket: recover spans + a launch-error resolve
+        res = [s for s in trc.spans_for(2) if s.name == "request.resolve"]
+        assert len(res) == 1 and res[0].attrs["outcome"] == "launch-error"
+        assert isinstance(results[2], serving.LaunchError)
+        # its terminal error carries the flight-recorder window
+        assert isinstance(results[2].flight, list) and results[2].flight
+        assert all("name" in e for e in results[2].flight)
+        # the bucket neighbours all recovered, each with a complete tree
+        for t in [t for t in tickets if t != 2]:
+            outs = [s.attrs["outcome"] for s in trc.spans_for(t)
+                    if s.name == "request.resolve"]
+            assert outs == ["ok"]
+        assert trc.count("launch") == serving.stats["launches"]
+
+    def test_every_ticket_accounted_under_mixed_faults(self):
+        inj = faults.FaultInjector(flaky_tickets=frozenset({0}),
+                                   backend_tickets=frozenset({1}),
+                                   corrupt_tickets=frozenset({3}),
+                                   poison_tickets=frozenset({4}),
+                                   flaky_attempts=1)
+        srv, trc, tickets, results = self._traced_faulty(inj, n=8)
+        for t in tickets:
+            spans = trc.spans_for(t)
+            assert any(s.name == "request.validate"
+                       and s.attrs["outcome"] == "admitted" for s in spans)
+            resolves = [s for s in spans if s.name == "request.resolve"]
+            assert len(resolves) == 1, f"ticket {t} must resolve exactly once"
+            assert resolves[0].attrs["outcome"] in ("ok", "launch-error")
+        assert trc.count("launch") == serving.stats["launches"]
+        # the poisoned ticket is terminally failed; the corrupted one may
+        # also fail after bisection isolates it -- both resolve exactly
+        # once (asserted above), which is the invariant under test
+        assert serving.stats["failed_requests"] >= 1
+        assert isinstance(results[4], serving.LaunchError)
+
+
+# ---------------------------------------------------------------------------
+# per-server counters vs the module aggregate (the multi-server drift fix)
+# ---------------------------------------------------------------------------
+
+class TestPerServerCounters:
+    def test_two_servers_do_not_blur(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        a = serving.GeometryServer(backend="ref")
+        b = serving.GeometryServer(backend="ref")
+        for _ in range(3):
+            a.submit(_chain2(), _pts(8))
+        for _ in range(5):
+            b.submit(_chain2(), _pts(8))
+        a.flush()
+        b.flush()
+        assert a.metrics.value("requests") == 3
+        assert b.metrics.value("requests") == 5
+        assert a.metrics.value("launches") == 1
+        assert b.metrics.value("launches") == 1
+        # the module view is the explicit aggregate across servers
+        assert serving.stats["requests"] == 8
+        assert serving.stats["launches"] == \
+            a.metrics.value("launches") + b.metrics.value("launches")
+
+    def test_reset_stats_clears_server_registry(self):
+        srv = _fresh(backend="ref")
+        srv.submit(_chain2(), _pts(4))
+        srv.flush()
+        assert srv.metrics.value("requests") == 1
+        srv.reset_stats()
+        assert srv.metrics.value("requests") == 0
+
+    def test_two_async_engines_mirror_rejections_by_delta(self):
+        # the old absolute mirror clobbered the module counters when two
+        # engines served side by side; deltas must sum
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        clock = VirtualClock()
+        cfg = serving.AdmissionConfig(max_queue_depth=1, tenant_share=1.0)
+        e1 = AsyncGeometryServer(backend="ref", clock=clock, admission=cfg)
+        e2 = AsyncGeometryServer(backend="ref", clock=clock, admission=cfg)
+        for eng_ in (e1, e2):
+            eng_.submit_async(_chain2(), _pts(4))
+            for _ in range(2):
+                with pytest.raises(serving.QueueFullError):
+                    eng_.submit_async(_chain2(), _pts(4))
+        assert e1.stats["queue_full_rejections"] == 2
+        assert e2.stats["queue_full_rejections"] == 2
+        assert serving.stats["queue_full_rejections"] == 4
+        e1.drain()
+        e2.drain()
+
+
+# ---------------------------------------------------------------------------
+# async front-end tracing
+# ---------------------------------------------------------------------------
+
+class TestAsyncTracing:
+    def test_queue_wait_and_policy_spans(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        clock = VirtualClock()
+        eng_ = AsyncGeometryServer(
+            backend="ref", clock=clock,
+            slo=SLOConfig(max_wait_s=0.01, target_rows=4))
+        trc = obs.Tracer(clock=clock)
+        with obs.installed(trc):
+            t = eng_.submit_async(_chain2(), _pts(6), tenant="a")
+            due = eng_.next_due_in()
+            clock.advance(due)
+            eng_.poll()
+        assert t.done()
+        waits = [s for s in trc.spans if s.name == "queue.wait"]
+        assert len(waits) == 1 and waits[0].ticket == t.id
+        assert waits[0].duration == pytest.approx(due)
+        assert 0.0 < waits[0].duration <= 0.01
+        pol = [s for s in trc.spans if s.name == "policy.launch"]
+        assert len(pol) == 1 and pol[0].attrs["reason"] == "deadline"
+        subs = [s for s in trc.spans if s.name == "request.submit"]
+        assert subs[0].attrs["outcome"] == "admitted"
+        assert subs[0].ticket == t.id
+
+    def test_fill_reason_and_admission_reject_instant(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        clock = VirtualClock()
+        eng_ = AsyncGeometryServer(
+            backend="ref", clock=clock,
+            slo=SLOConfig(max_wait_s=1.0, target_rows=2),
+            admission=serving.AdmissionConfig(max_queue_depth=2,
+                                              tenant_share=1.0))
+        trc = obs.Tracer(clock=clock)
+        with obs.installed(trc):
+            eng_.submit_async(_chain2(), _pts(4))
+            eng_.submit_async(_chain2(), _pts(4))
+            with pytest.raises(serving.QueueFullError):
+                eng_.submit_async(_chain2(), _pts(4))
+            eng_.poll()                      # full bucket: due immediately
+        pol = [s for s in trc.spans if s.name == "policy.launch"]
+        assert [s.attrs["reason"] for s in pol] == ["fill"]
+        rej = [s for s in trc.spans if s.name == "admission.reject"]
+        assert len(rej) == 1 and rej[0].attrs["code"] == "queue-full"
+        assert rej[0].attrs["gate"] == "depth"
+
+    def test_registry_backed_stats_view_unchanged(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        clock = VirtualClock()
+        eng_ = AsyncGeometryServer(backend="ref", clock=clock)
+        t = eng_.submit_async(_chain2(), _pts(4), tenant="r")
+        eng_.drain()
+        st = eng_.stats
+        assert st["admitted"] == 1 and st["resolved"] == 1
+        assert st["failed"] == 0 and st["queue_depth"] == 0
+        assert st["p50_latency_s"] == st["p99_latency_s"] >= 0.0
+        assert eng_.metrics.value("tenant_requests", tenant="r") == 1
+        assert not serving.is_error(t.result())
+
+
+# ---------------------------------------------------------------------------
+# chaos soak post-mortems
+# ---------------------------------------------------------------------------
+
+class TestChaosPostmortems:
+    def test_soak_attaches_postmortems(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        rep = faults.run_chaos_soak(seed=3, n_requests=48)
+        assert rep.lost == 0
+        assert rep.postmortems, "faults fired, so post-mortems must exist"
+        for pm in rep.postmortems:
+            assert str(pm["track"]).startswith("recovery")
+            assert pm["events"] and all("name" in e for e in pm["events"])
+        json.dumps(rep.postmortems)           # plain-JSON by construction
+        assert "postmortems" not in rep.counters()
+
+    def test_soak_is_deterministic_with_postmortems(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        r1 = faults.run_chaos_soak(seed=5, n_requests=32)
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        r2 = faults.run_chaos_soak(seed=5, n_requests=32)
+        assert r1.counters() == r2.counters()
+        assert [pm["track"] for pm in r1.postmortems] == \
+            [pm["track"] for pm in r2.postmortems]

@@ -61,6 +61,10 @@ DETERMINISTIC_FIELDS = frozenset({
     # is the marker separating them from never-gated wall-clock fields)
     "admitted", "rate_limited", "queue_full", "failed", "polls",
     "p50_virtual_us", "p99_virtual_us", "virtual_rps",
+    # observability (soak_trace{,_overhead} rows): span/event counts of
+    # the virtual-clock traced soak are exact, and counters_identical=1
+    # pins that tracing never steers the serving stack
+    "trace_spans", "trace_events", "counters_identical",
 })
 
 #: rows whose presence (in BOTH files) the gate insists on -- the launch
