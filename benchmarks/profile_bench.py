@@ -1,0 +1,119 @@
+"""Profiler + SLO benchmark rows: the analysis layer's own determinism,
+gated.
+
+Two row families (see benchmarks/PERF.md):
+
+  * ``profile_attrib{_smoke}`` -- the seeded 64-request mixed-lane smoke
+    workload served under a traced virtual clock and folded by
+    ``repro.obs.profile``.  Every derived field is a bit-deterministic
+    counter: span/event totals, launch counts by all three aggregation
+    axes, observed and predicted HBM bytes, predicted FLOPs and M1
+    cycles, and the two exactness flags the PR's acceptance rests on --
+    ``attribution_exact=1`` (the attribution tree's launch count equals
+    ``serving.stats["launches"]``) and ``byte_ratio_exact=1`` (every
+    launch's observed/predicted byte ratio is exactly 1.0, the shared
+    opcount/costmodel formula).  The wall-clock column is the host cost
+    of serving + folding; never gated.
+  * ``slo_burn{_smoke}`` -- the canonical scripted error-budget train
+    (good@1s, bad@2s, good@3..5s on a virtual clock, one second-scale
+    burn rule) plus a monitored async serving drive.  Gated fields pin
+    the alert count AND the exact virtual firing/resolution instants in
+    microseconds -- the monitor evaluates synchronously on every
+    observation, so the instants are pure functions of the script.
+"""
+from __future__ import annotations
+
+import time
+
+from repro import serving
+from repro.obs.profile import Profile, profile_smoke_workload
+from repro.obs.slo import BurnRule, SLOMonitor
+from repro.serving import engine, workload
+from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
+from repro.serving.clock import VirtualClock
+
+SEED = 17
+REQUESTS = 64
+
+
+def _attrib_row(tag: str) -> tuple[str, dict]:
+    engine.reset_stats()
+    t0 = time.perf_counter()
+    tracer, _server = profile_smoke_workload(REQUESTS, seed=SEED)
+    prof = Profile.from_tracer(tracer)
+    wall = time.perf_counter() - t0
+    c = prof.counters()
+    c["attribution_exact"] = int(
+        prof.launches == serving.stats["launches"] > 0)
+    gated = ("events", "spans", "launches", "kernels", "launch_buckets",
+             "hbm_bytes", "pred_hbm_bytes", "pred_flops",
+             "pred_m1_cycles", "byte_ratio_exact", "attribution_exact")
+    derived = ";".join(f"{k}={c[k]}" for k in gated)
+    return f"profile_attrib{tag},{wall * 1e6:.1f},{derived}", c
+
+
+def _burn_row(tag: str) -> tuple[str, dict]:
+    t0 = time.perf_counter()
+    # the scripted train: deterministic fire at 2.0 s, resolve at 5.0 s
+    clock = VirtualClock()
+    mon = SLOMonitor(clock, latency_slo_s=0.05, latency_target=0.9,
+                     rejection_target=0.9,
+                     rules=(BurnRule(long_s=10.0, short_s=2.0,
+                                     threshold=2.0),))
+    for t, latency in ((1.0, 0.01), (2.0, 0.10), (3.0, 0.01),
+                       (4.0, 0.01), (5.0, 0.01)):
+        clock.advance_to(t)
+        mon.observe_latency(latency)
+    c = mon.counters()
+    # the wired path: a monitored async drive over the same seeded pool
+    # (generous SLO: events flow, no alert) -- proves the three feed
+    # points move the monitor without steering the engine
+    serving.reset_stats()
+    serving.clear_plan_cache()
+    aclock = VirtualClock()
+    amon = SLOMonitor(aclock, latency_slo_s=10.0, latency_target=0.9,
+                      rules=(BurnRule(long_s=10.0, short_s=2.0,
+                                      threshold=2.0),))
+    eng = AsyncGeometryServer(
+        backend="ref", clock=aclock, slo_monitor=amon,
+        slo=SLOConfig(max_wait_s=0.01, target_rows=8))
+    for chain, pts, qname in workload.mixed_lane_workload(
+            SEED, REQUESTS, max_points=48):
+        eng.submit_async(chain, pts, qformat=qname)
+        aclock.advance(0.001)
+        eng.poll()
+    eng.drain()
+    ac = amon.counters()
+    wall = time.perf_counter() - t0
+    out = {
+        "latency_alerts_fired": c["latency_alerts_fired"],
+        "latency_first_fire_us": c["latency_first_fire_us"],
+        "latency_first_resolve_us": c["latency_first_resolve_us"],
+        "latency_bad_events": c["latency_bad_events"],
+        "served_latency_events": ac["latency_events"],
+        "served_rejections_events": ac["rejections_events"],
+        "served_alerts_fired": ac["latency_alerts_fired"]
+        + ac["rejections_alerts_fired"],
+    }
+    derived = ";".join(f"{k}={v}" for k, v in out.items())
+    return f"slo_burn{tag},{wall * 1e6:.1f},{derived}", out
+
+
+def run(smoke: bool = False) -> list[str]:
+    tag = "_smoke" if smoke else ""
+    rows = []
+    row, c = _attrib_row(tag)
+    rows.append(row)
+    print(f"profile_attrib: {c['launches']} launches over "
+          f"{c['launch_buckets']} buckets / {c['kernels']} kernels, "
+          f"{c['events']} trace events; attribution exact: "
+          f"{bool(c['attribution_exact'])}, byte ratio exact: "
+          f"{bool(c['byte_ratio_exact'])}")
+    row, s = _burn_row(tag)
+    rows.append(row)
+    print(f"slo_burn: scripted alert fired {s['latency_alerts_fired']}x "
+          f"(fire @ {s['latency_first_fire_us'] / 1e6:.1f} virtual s, "
+          f"resolve @ {s['latency_first_resolve_us'] / 1e6:.1f}); "
+          f"monitored drive saw {s['served_latency_events']} resolutions"
+          f", {s['served_alerts_fired']} alerts")
+    return rows

@@ -23,7 +23,11 @@ the recovery machinery's wall-clock overhead under faults).  ``--soak``
 records the continuous-batching rows (``soak_*``: a seeded Poisson
 arrival stream driven through the async front-end on a virtual clock --
 admission, launch, and latency counters are all deterministic and
-exact-gated by the soak CI lane).  ``--out``
+exact-gated by the soak CI lane).  ``--profile`` records the analysis
+layer's rows (``profile_attrib``: span-stream attribution counters with
+the ``attribution_exact``/``byte_ratio_exact`` flags; ``slo_burn``:
+pinned virtual-clock alert instants), gated by the profile-smoke CI
+lane.  ``--out``
 overrides the JSON path (``--out ''`` disables the record; CI instead
 writes to a scratch path, gates on it with ``tools/check_bench.py``, and
 uploads it as a workflow artifact); the default path is collision-proof
@@ -97,6 +101,10 @@ def main(argv=None) -> None:
                          "Poisson arrivals through the async front-end "
                          "on a virtual clock; deterministic admission/"
                          "latency counters, exact-gated)")
+    ap.add_argument("--profile", action="store_true",
+                    help="record profiler + SLO rows (span-stream "
+                         "attribution counters with exactness flags, and "
+                         "pinned virtual-clock alert instants)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="with --soak: write the traced soak's span "
                          "stream as byte-deterministic Chrome-trace JSON")
@@ -115,7 +123,8 @@ def main(argv=None) -> None:
     sys.path.insert(0, root)
     from benchmarks import (autotune_bench, chaos_bench, fixedpoint_bench,
                             graphics_bench, kernel_bench, paper_tables,
-                            roofline_bench, serving_bench, soak_bench)
+                            profile_bench, roofline_bench, serving_bench,
+                            soak_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -140,6 +149,9 @@ def main(argv=None) -> None:
         print("\n== soak (Poisson arrivals through the async front-end) ==")
         rows += soak_bench.run(smoke=args.smoke, trace_path=args.trace,
                                prom_path=args.prom)
+    if args.profile:
+        print("\n== profile (span-stream attribution + SLO burn rate) ==")
+        rows += profile_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

@@ -177,6 +177,45 @@ def packed_chain_cost(bsz: int, lpad: int, d: int, kind: str,
                         feasible=block_bytes <= VMEM_BYTES)
 
 
+@dataclasses.dataclass(frozen=True)
+class LaunchPrediction:
+    """The cost model's view of ONE dispatched serving launch, attached
+    to the launch's trace instant at dispatch time (``serving.engine.
+    _count_launch``) so the profiler can fold predicted-vs-observed
+    ratios out of the span stream.
+
+    ``hbm_bytes`` and ``flops`` come from ``packed_chain_cost``, whose
+    byte formula IS ``opcount.packed_chain_bytes`` -- the same number the
+    engine records as the launch's observed ``hbm_bytes`` -- so the
+    byte ratio is exactly 1.0 by construction on every backend, and any
+    drift between the two is a real accounting bug, not model error.
+    ``m1_cycles`` is the paper-methodology projection
+    (``m1_chain_cycles``): what this launch would cost on the M1 array.
+    """
+    kernel: str
+    hbm_bytes: int
+    flops: int
+    m1_cycles: int
+
+
+def predict_launch(kind: str, bsz: int, lpad: int, d: int, *,
+                   qformat: str | None = None,
+                   itemsize: int | None = None) -> LaunchPrediction:
+    """Predict one packed-bucket launch (B requests padded to L points)
+    of a serving plan: the per-launch prediction API the engine calls at
+    dispatch time.  ``kind`` is the plan kind (``diag`` / ``matrix`` /
+    ``projective``); a non-None ``qformat`` selects the int16 ``_q``
+    cost kind (2-byte words), mirroring how the engine's plans carry
+    the format separately from the kind."""
+    cost_kind = kind if kind.endswith("_q") or qformat is None \
+        else kind + "_q"
+    est = packed_chain_cost(bsz, lpad, d, cost_kind, itemsize=itemsize)
+    return LaunchPrediction(kernel=est.kernel, hbm_bytes=est.hbm_bytes,
+                            flops=est.flops,
+                            m1_cycles=m1_chain_cycles(cost_kind,
+                                                      bsz * lpad, d))
+
+
 # -- matmul / rmsnorm ---------------------------------------------------------
 
 def matmul_cost(m: int, k: int, n: int, config: KernelConfig | None = None,
@@ -271,6 +310,31 @@ def morphosys_cycles(routine: str, n: int) -> int:
         length = (2 + dma_wait(n)) + 5 + 2 * ncols + 2
     else:
         raise ValueError(f"no closed form for routine {routine!r}")
+    return length - 1
+
+
+def m1_chain_cycles(kind: str, n_points: int, d: int) -> int:
+    """Projected M1 cycle count for one packed chain launch: the
+    Tables 1-2 program skeleton generalised beyond the paper's two
+    routines.  The element stream (``n_points * d`` words, padded to a
+    multiple of the RC-array width) loads through the frame buffer in
+    ``chain_passes(kind)`` operand passes of ``2 + dma_wait`` slots
+    each, a 5-slot context load configures the array, each 8-element
+    column spends one instruction slot per MAC-pair of the kind's
+    per-point schedule plus the writeback, and the 2-slot store drains;
+    cycles = instructions - 1, exactly the ``morphosys_cycles``
+    accounting.  This is a PROJECTION (the paper only published the
+    translation/scaling listings, which ``morphosys_cycles`` reproduces
+    exactly) -- deterministic, monotone in the launch shape, and used
+    for attribution, never for gating against the emulator."""
+    base = _base_kind(kind)
+    if base not in ("diag", "matrix", "projective"):
+        raise ValueError(f"no M1 projection for plan kind {kind!r}")
+    n = max(RC_N, _cdiv(max(1, n_points) * d, RC_N) * RC_N)
+    ncols = n // RC_N
+    per_col = _chain_flops_per_point(d, base) // (2 * d) + 1
+    length = (_chain_passes(base) * (2 + dma_wait(n)) + 5
+              + per_col * ncols + 2)
     return length - 1
 
 

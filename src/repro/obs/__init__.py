@@ -1,7 +1,9 @@
-"""Observability: deterministic tracing, typed metrics, exporters, and a
-flight recorder for the serving stack.
+"""Observability: deterministic tracing, typed metrics, exporters, a
+flight recorder, and the analysis layer built on top of them -- the
+cost-model-attributed profiler, the SLO burn-rate monitor, and the
+bench-trajectory trend analytics.
 
-The layer has four pieces (see ``docs/architecture.md`` section 8):
+The layer's pieces (see ``docs/architecture.md`` sections 8-9):
 
   * ``obs.trace``    -- span-tree tracer with an injectable clock; under
     ``serving.clock.VirtualClock`` every timestamp and span count is
@@ -16,6 +18,15 @@ The layer has four pieces (see ``docs/architecture.md`` section 8):
     exposition.
   * ``obs.recorder`` -- bounded ring-buffer flight recorder dumped into
     ``LaunchError`` / chaos post-mortems.
+  * ``obs.profile``  -- folds a traced run's span stream into a
+    self/child attribution tree and per-kernel launch tables, with the
+    cost model's per-launch predictions (attached at dispatch time)
+    compared against observed traffic; ``python -m repro.obs.profile``.
+  * ``obs.slo``      -- multi-window burn-rate alerting over the
+    latency / rejection error budgets, deterministic under a virtual
+    clock, exported through ``prometheus_text``.
+  * ``obs.bench_history`` -- the committed ``BENCH_*.json`` records as
+    a time series; ``tools/bench_trend.py`` gates directional drift.
 
 Quickstart::
 
@@ -37,9 +48,33 @@ from repro.obs.recorder import FlightRecorder
 from repro.obs.trace import (NullTracer, Span, SpanNode, Tracer, active,
                              install, installed)
 
+#: analysis-layer symbols resolved lazily (PEP 562): ``repro.obs.profile``
+#: is also a ``python -m`` entry point, and an eager package-level import
+#: of it would trip runpy's double-import warning on every CLI invocation
+_LAZY = {
+    "LaunchGroup": "profile", "Profile": "profile",
+    "ProfileNode": "profile", "dump_span_stream": "profile",
+    "load_span_stream": "profile",
+    "BurnRule": "slo", "SLOMonitor": "slo",
+}
+
+
+def __getattr__(name):
+    submodule = _LAZY.get(name)
+    if submodule is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    value = getattr(importlib.import_module(f"repro.obs.{submodule}"),
+                    name)
+    globals()[name] = value
+    return value
+
 __all__ = [
-    "Counter", "FlightRecorder", "Gauge", "Histogram", "MetricsRegistry",
-    "NullTracer", "Span", "SpanNode", "StatsView", "Tracer", "active",
-    "chrome_trace", "chrome_trace_events", "dump_chrome_trace", "install",
-    "installed", "percentile", "prometheus_text",
+    "BurnRule", "Counter", "FlightRecorder", "Gauge", "Histogram",
+    "LaunchGroup", "MetricsRegistry", "NullTracer", "Profile",
+    "ProfileNode", "SLOMonitor", "Span", "SpanNode", "StatsView", "Tracer",
+    "active", "chrome_trace", "chrome_trace_events", "dump_chrome_trace",
+    "dump_span_stream", "install", "installed", "load_span_stream",
+    "percentile", "prometheus_text",
 ]

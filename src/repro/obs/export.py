@@ -14,8 +14,11 @@ obs-smoke CI lane diffs two independent runs and the committed trace.
 
 The Prometheus exposition is the standard text format, families sorted
 by name and label sets sorted by value tuple, so the output is also
-deterministic and snapshot-gateable.  Histograms render as summaries
-(nearest-rank quantile series + ``_count`` + ``_sum``).
+deterministic and snapshot-gateable.  Histograms render as real
+cumulative histograms -- ``_bucket{le="<bound>"}`` series over
+``Histogram.BOUNDS`` ending in ``le="+Inf"``, then ``_sum`` and
+``_count`` -- so downstream ``histogram_quantile()`` works on the
+scrape, not just on our nearest-rank summaries.
 """
 from __future__ import annotations
 
@@ -116,26 +119,30 @@ def prometheus_text(*registries: MetricsRegistry) -> str:
          for reg in registries for fam in reg.families.values()),
         key=lambda p: p[0])
     for name, fam in fams:
-        kind = "summary" if fam.kind == "histogram" else fam.kind
         if fam.help:
             lines.append(f"# HELP {name} {_escape(fam.help)}")
-        lines.append(f"# TYPE {name} {kind}")
+        lines.append(f"# TYPE {name} {fam.kind}")
         for values in sorted(fam.children):
             child = fam.children[values]
             if isinstance(child, Histogram):
-                for q in Histogram.QUANTILES:
-                    qv = child.percentile(q) if child.count else 0.0
-                    qlabel = 'quantile="%g"' % (q / 100)
+                counts = child.bucket_counts()
+                for bound, c in zip(Histogram.BOUNDS, counts):
+                    lelabel = 'le="%g"' % bound
                     lines.append(
-                        f"{name}"
-                        f"{_labelstr(fam.labelnames, values, qlabel)}"
-                        f" {_fmt(qv)}")
-                lines.append(f"{name}_count"
-                             f"{_labelstr(fam.labelnames, values)}"
-                             f" {child.count}")
+                        f"{name}_bucket"
+                        f"{_labelstr(fam.labelnames, values, lelabel)}"
+                        f" {c}")
+                inf = 'le="+Inf"'
+                lines.append(
+                    f"{name}_bucket"
+                    f"{_labelstr(fam.labelnames, values, inf)}"
+                    f" {child.count}")
                 lines.append(f"{name}_sum"
                              f"{_labelstr(fam.labelnames, values)}"
                              f" {_fmt(child.sum)}")
+                lines.append(f"{name}_count"
+                             f"{_labelstr(fam.labelnames, values)}"
+                             f" {child.count}")
             else:
                 lines.append(f"{name}{_labelstr(fam.labelnames, values)}"
                              f" {_fmt(child.value)}")

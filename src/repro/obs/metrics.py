@@ -93,11 +93,20 @@ class Histogram:
     """A sample distribution: stores the samples (the serving stack's
     populations are bounded by the soak sizes) and answers count / sum /
     max / nearest-rank quantiles.  Prometheus exposition renders it as a
-    summary (quantile series + _count + _sum)."""
+    real cumulative histogram (``_bucket{le=...}`` series over
+    ``BOUNDS`` plus ``_sum``/``_count``); bucket counts are integers
+    over fixed bounds, so the exposition stays byte-deterministic under
+    seeded workloads."""
 
     __slots__ = ("samples",)
 
     QUANTILES = (50.0, 99.0)
+
+    #: cumulative upper bounds for the Prometheus ``_bucket`` series
+    #: (seconds -- the serving stack's histograms are latencies); the
+    #: ``+Inf`` bucket is implicit in the exposition
+    BOUNDS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+              0.5, 1.0, 2.5)
 
     def __init__(self):
         self.samples: list[float] = []
@@ -119,6 +128,12 @@ class Histogram:
 
     def percentile(self, q: float) -> float:
         return percentile(self.samples, q)
+
+    def bucket_counts(self, bounds=None) -> list[int]:
+        """Cumulative counts at each upper bound (samples <= bound); the
+        implicit ``+Inf`` bucket is ``count``, appended by the exporter."""
+        bs = self.BOUNDS if bounds is None else bounds
+        return [sum(1 for s in self.samples if s <= b) for b in bs]
 
 
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}

@@ -205,9 +205,18 @@ class AsyncGeometryServer:
                  clock: Clock | None = None,
                  slo: SLOConfig | None = None,
                  admission: AdmissionConfig | None = None,
+                 slo_monitor=None,
                  **server_kw):
         self.clock = clock if clock is not None else MonotonicClock()
         self.slo = slo or SLOConfig()
+        #: optional ``obs.slo.SLOMonitor`` (any duck with
+        #: observe_latency / observe_admission / observe_rejection):
+        #: fed at the admission gate and at every resolution, so its
+        #: burn-rate arithmetic sees exactly the events the engine's
+        #: own telemetry counts.  None (the default) costs one branch
+        #: per event -- monitoring, like tracing, is opt-in and must
+        #: never steer the serving counters.
+        self.slo_monitor = slo_monitor
         self._server = engine.GeometryServer(backend=backend, **server_kw)
         self._admission = AdmissionController(
             admission or AdmissionConfig(), self.clock)
@@ -256,6 +265,8 @@ class AsyncGeometryServer:
             self._admission.admit(tenant)    # raises typed rejection
         except BaseException as e:
             self._mirror_admission_stats()
+            if self.slo_monitor is not None:
+                self.slo_monitor.observe_rejection()
             if sid is not None:
                 trc.end(sid, outcome="rejected",
                         gate="admission",
@@ -283,6 +294,8 @@ class AsyncGeometryServer:
         if self._first_arrival is None:
             self._first_arrival = now
         self._g_depth.track_max(self.queue_depth)
+        if self.slo_monitor is not None:
+            self.slo_monitor.observe_admission()
         self._server._bump("admitted_requests")
         self.metrics.counter("tenant_requests", labels=("tenant",)) \
             .labels(tenant=tenant).inc()
@@ -395,6 +408,8 @@ class AsyncGeometryServer:
             e.ticket._resolve(res, done)
             self._admission.release(e.tenant)
             self._h_latency.observe(done - e.arrival)
+            if self.slo_monitor is not None:
+                self.slo_monitor.observe_latency(done - e.arrival)
             if engine.serrors.is_error(res):
                 self._c_failed.inc()
             else:

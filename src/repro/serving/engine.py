@@ -776,18 +776,28 @@ class GeometryServer:
         trc = obst.active()
         if trc.enabled:
             # per-attempt annotation: backend rung, plan kind, autotune
-            # config source, and the opcount HBM bytes this launch moves
+            # config source, the opcount HBM bytes this launch moves, and
+            # the cost model's per-launch prediction (bytes / FLOPs / M1
+            # cycle projection) -- attached at dispatch time so the
+            # profiler can fold predicted-vs-observed ratios out of the
+            # span stream without re-deriving launch shapes
+            from repro.autotune import costmodel  # late: traced path only
             dtype = plan.qformat if plan.qformat is not None \
                 else str(packed.dtype)
             kernel = _KERNEL_BY_KIND[plan.kind] \
                 + ("_q" if plan.qformat else "")
             cfg = tuning.config_for(kernel, plan.backend, dtype,
                                     len(reqs) * lpad)
+            pred = costmodel.predict_launch(
+                plan.kind, len(reqs), lpad, plan.dim,
+                qformat=plan.qformat, itemsize=packed.dtype.itemsize)
             trc.instant(
                 "launch", tickets=tuple(r.ticket for r in reqs),
                 track=track, backend=plan.backend, kind=plan.kind,
                 q=plan.qformat, rung=rung, attempt=attempt,
-                rows=len(reqs), lpad=lpad, hbm_bytes=nbytes,
+                rows=len(reqs), lpad=lpad, kernel=pred.kernel,
+                hbm_bytes=nbytes, pred_hbm_bytes=pred.hbm_bytes,
+                pred_flops=pred.flops, pred_m1_cycles=pred.m1_cycles,
                 config=cfg.source)
 
     # -- flush: dispatch, unpack, recover ------------------------------------

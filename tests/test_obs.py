@@ -7,6 +7,7 @@ success, rejection, recovery, or bisection -- and the ``launch``
 instant count equals ``stats["launches"]`` exactly).
 """
 import json
+import math
 
 import numpy as np
 import pytest
@@ -181,6 +182,52 @@ class TestMetrics:
         assert percentile is obs.percentile
         assert percentile([3.0, 1.0, 2.0], 50) == 2.0
 
+    def test_percentile_empty_is_nan(self):
+        assert math.isnan(obs.percentile([], 50))
+        assert math.isnan(obs.percentile([], 0))
+        assert math.isnan(obs.percentile([], 100))
+
+    def test_percentile_single_sample_is_that_sample(self):
+        for q in (0, 1, 50, 99, 100):
+            assert obs.percentile([7.0], q) == 7.0
+
+    def test_percentile_all_equal(self):
+        for q in (0, 50, 99, 100):
+            assert obs.percentile([3.0] * 5, q) == 3.0
+
+    def test_percentile_nearest_rank_ties(self):
+        # nearest rank is exact set membership: p50 of an even-length
+        # sample is the LOWER middle element (rank ceil(0.5*4) = 2),
+        # and p99 of any sample shorter than 100 is its maximum
+        assert obs.percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.0
+        assert obs.percentile([1.0, 2.0, 3.0, 4.0, 5.0], 50) == 3.0
+        assert obs.percentile([1.0, 2.0, 3.0, 4.0], 99) == 4.0
+        assert obs.percentile(range(1, 101), 99) == 99
+        assert obs.percentile(range(1, 101), 50) == 50
+        # duplicated median: ties collapse to the shared value
+        assert obs.percentile([1.0, 2.0, 2.0, 9.0], 50) == 2.0
+        with pytest.raises(ValueError):
+            obs.percentile([1.0], 101)
+        with pytest.raises(ValueError):
+            obs.percentile([1.0], -1)
+
+    def test_histogram_edge_cases(self):
+        h = obs.Histogram()
+        # empty: count/sum/max well-defined, quantile nan, buckets zero
+        assert h.count == 0 and h.sum == 0.0 and h.max == 0.0
+        assert math.isnan(h.percentile(99))
+        assert h.bucket_counts() == [0] * len(obs.Histogram.BOUNDS)
+        # single sample sits in every bucket at or above its bound
+        h.observe(0.01)
+        assert h.percentile(50) == 0.01 and h.percentile(99) == 0.01
+        assert h.bucket_counts((0.005, 0.01, 0.05)) == [0, 1, 1]
+        # all-equal: every quantile is the shared value
+        h2 = obs.Histogram()
+        for _ in range(8):
+            h2.observe(2.0)
+        assert h2.percentile(50) == 2.0 == h2.percentile(99)
+        assert h2.count == 8 and h2.sum == 16.0 and h2.max == 2.0
+
 
 # ---------------------------------------------------------------------------
 # exporters
@@ -231,13 +278,22 @@ class TestExport:
         assert "# HELP srv_alpha first" in lines
         assert lines.index("# TYPE srv_alpha counter") < \
             lines.index("# TYPE srv_zeta counter")
-        # label children sort by value; histograms render as summaries
+        # label children sort by value; histograms render as cumulative
+        # bucket series
         ia = lines.index('srv_by_tenant{tenant="a"} 3')
         ib = lines.index('srv_by_tenant{tenant="b"} 1')
         assert ia < ib
-        assert "# TYPE srv_lat summary" in lines
-        assert 'srv_lat{quantile="0.5"} 0.5' in lines
+        assert "# TYPE srv_lat histogram" in lines
+        assert 'srv_lat_bucket{le="0.25"} 0' in lines
+        assert 'srv_lat_bucket{le="0.5"} 1' in lines      # 0.5 <= 0.5
+        assert 'srv_lat_bucket{le="2.5"} 1' in lines
+        assert 'srv_lat_bucket{le="+Inf"} 1' in lines
+        assert "srv_lat_sum 0.5" in lines
         assert "srv_lat_count 1" in lines
+        # bucket lines are cumulative and ordered bound-ascending
+        bucket_vals = [int(ln.rsplit(" ", 1)[1]) for ln in lines
+                       if ln.startswith("srv_lat_bucket")]
+        assert bucket_vals == sorted(bucket_vals)
         assert obs.prometheus_text(reg) == text    # deterministic
 
 

@@ -1,0 +1,211 @@
+"""SLO burn-rate monitor tests: pinned alert instants under a scripted
+virtual clock, Prometheus exposition of alert state, and the async
+front-end wiring.
+
+The design invariant under test: the monitor re-evaluates on EVERY
+observation through the injectable clock, so the alert fires AT the
+event that crossed the threshold -- a bit-deterministic virtual-second
+the tests pin to exact floats.
+"""
+import numpy as np
+import pytest
+
+from repro import obs, serving
+from repro.core import transform_chain as tc
+from repro.obs.slo import (DEFAULT_RULES, LATENCY, REJECTIONS, BurnRule,
+                           SLOMonitor)
+from repro.serving.async_engine import AsyncGeometryServer, SLOConfig
+from repro.serving.clock import VirtualClock
+
+RNG = np.random.default_rng(81)
+
+#: one second-scale rule so tests script whole-second event trains:
+#: burn >= 2 on the trailing 10 s AND the trailing 2 s
+RULE = BurnRule(long_s=10.0, short_s=2.0, threshold=2.0)
+
+
+def _monitor(clock, **kw):
+    kw.setdefault("latency_slo_s", 0.05)
+    kw.setdefault("latency_target", 0.9)
+    kw.setdefault("rejection_target", 0.9)
+    kw.setdefault("rules", (RULE,))
+    return SLOMonitor(clock, **kw)
+
+
+def _chain2():
+    return tc.TransformChain.identity(2).translate(0.5, -0.25).scale(1.5)
+
+
+def _pts(n=8, dim=2):
+    return RNG.uniform(-1, 1, (n, dim)).astype(np.float32)
+
+
+class TestBurnRule:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            BurnRule(long_s=1.0, short_s=2.0, threshold=1.0)
+        with pytest.raises(ValueError):
+            BurnRule(long_s=1.0, short_s=0.0, threshold=1.0)
+        with pytest.raises(ValueError):
+            BurnRule(long_s=2.0, short_s=1.0, threshold=0.0)
+        assert DEFAULT_RULES[0].threshold == 14.4
+
+    def test_monitor_validation(self):
+        clk = VirtualClock()
+        with pytest.raises(ValueError):
+            SLOMonitor(clk, latency_slo_s=0.1, rules=())
+        with pytest.raises(ValueError):
+            SLOMonitor(clk, latency_slo_s=0.1, latency_target=1.0)
+
+
+class TestPinnedAlertInstants:
+    def _script(self, mon, clock):
+        """good@1, bad@2, good@3..5: the canonical fire/resolve train."""
+        for t, latency in ((1.0, 0.01), (2.0, 0.10), (3.0, 0.01),
+                           (4.0, 0.01), (5.0, 0.01)):
+            clock.advance_to(t)
+            mon.observe_latency(latency)
+
+    def test_latency_alert_fires_and_resolves_at_exact_instants(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        self._script(mon, clock)
+        alert = mon.alerts[LATENCY]
+        # the bad event at t=2 put burn at 5.0 (>2) on both windows ->
+        # fires AT that observation; the short window goes clean once
+        # the t=2 event ages out of the trailing 2 s -> resolves at t=5
+        assert alert.fired_at == [2.0]
+        assert alert.resolved_at == [5.0]
+        assert not alert.active and alert.fired == 1
+
+    def test_counters_round_trip_instants_in_us(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        self._script(mon, clock)
+        c = mon.counters()
+        assert c["latency_alerts_fired"] == 1
+        assert c["latency_alert_active"] == 0
+        assert c["latency_first_fire_us"] == 2_000_000.0
+        assert c["latency_first_resolve_us"] == 5_000_000.0
+        assert c["latency_bad_events"] == 1
+        assert c["latency_events"] == 5
+        assert c["rejections_events"] == 0
+
+    def test_rerun_is_bit_identical(self):
+        outs = []
+        for _ in range(2):
+            clock = VirtualClock()
+            mon = _monitor(clock)
+            self._script(mon, clock)
+            outs.append((mon.counters(),
+                         obs.prometheus_text(mon.metrics)))
+        assert outs[0] == outs[1]
+
+    def test_rejection_objective_fires(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        clock.advance_to(1.0)
+        mon.observe_admission()
+        clock.advance_to(2.0)
+        mon.observe_rejection()
+        assert mon.alerts[REJECTIONS].fired_at == [2.0]
+        assert mon.alerts[LATENCY].fired_at == []
+
+    def test_single_bad_blip_after_healthy_history_does_not_page(self):
+        # one bad event against a healthy long window: burn(long) stays
+        # under threshold, so the multi-window rule does not page
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        for k in range(10):
+            clock.advance_to(float(k + 1))
+            mon.observe_latency(0.01)
+        clock.advance_to(11.0)
+        mon.observe_latency(0.10)      # 1 bad of 11 in the long window
+        assert mon.alerts[LATENCY].fired_at == []
+        assert mon.burn_rate(LATENCY, RULE.long_s) < RULE.threshold
+
+    def test_window_trimming_bounds_memory(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        for k in range(100):
+            clock.advance_to(float(k))
+            mon.observe_latency(0.01)
+        # horizon is the longest window (10 s): old events are dropped
+        assert len(mon._events[LATENCY]) <= 12
+        assert mon.counters()["latency_events"] == 100
+
+    def test_slo_instants_reach_the_tracer(self):
+        clock = VirtualClock()
+        trc = obs.Tracer(clock=clock)
+        mon = _monitor(clock)
+        with obs.installed(trc):
+            self._script(mon, clock)
+        fires = [s for s in trc.spans if s.name == "slo.fire"]
+        resolves = [s for s in trc.spans if s.name == "slo.resolve"]
+        assert len(fires) == 1 and fires[0].t0 == 2.0
+        assert fires[0].attrs["objective"] == LATENCY
+        assert len(resolves) == 1 and resolves[0].t0 == 5.0
+
+
+class TestPrometheusExport:
+    def test_alert_state_in_exposition(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        clock.advance_to(1.0)
+        mon.observe_latency(0.01)
+        clock.advance_to(2.0)
+        mon.observe_latency(0.10)          # fires
+        text = obs.prometheus_text(mon.metrics)
+        assert '# TYPE slo_alert_active gauge' in text
+        assert 'slo_alert_active{objective="latency"} 1' in text
+        assert 'slo_alerts_fired{objective="latency"} 1' in text
+        assert 'slo_bad_events{objective="latency"} 1' in text
+        assert 'slo_burn_rate{objective="latency",window="2s"} 5.0' \
+            in text
+        assert 'slo_burn_rate{objective="latency",window="10s"} 5.0' \
+            in text
+
+
+class TestAsyncWiring:
+    def _engine(self, clock, mon, **kw):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        return AsyncGeometryServer(
+            backend="ref", clock=clock, slo_monitor=mon,
+            slo=SLOConfig(max_wait_s=0.01, target_rows=4), **kw)
+
+    def test_latency_and_admission_events_flow(self):
+        clock = VirtualClock()
+        mon = _monitor(clock, latency_slo_s=1.0)
+        eng_ = self._engine(clock, mon)
+        for _ in range(3):
+            eng_.submit_async(_chain2(), _pts(6))
+        eng_.drain()
+        c = mon.counters()
+        assert c["rejections_events"] == 3     # three admissions, no bad
+        assert c["rejections_bad_events"] == 0
+        assert c["latency_events"] == 3        # three resolutions
+        assert mon.alerts[LATENCY].fired_at == []
+
+    def test_rejections_feed_the_monitor(self):
+        clock = VirtualClock()
+        mon = _monitor(clock)
+        eng_ = self._engine(
+            clock, mon,
+            admission=serving.AdmissionConfig(max_queue_depth=1,
+                                              tenant_share=1.0))
+        eng_.submit_async(_chain2(), _pts(4))
+        with pytest.raises(serving.QueueFullError):
+            eng_.submit_async(_chain2(), _pts(4))
+        eng_.drain()
+        c = mon.counters()
+        assert c["rejections_events"] == 2
+        assert c["rejections_bad_events"] == 1
+
+    def test_default_is_unmonitored(self):
+        serving.reset_stats()
+        serving.clear_plan_cache()
+        eng_ = AsyncGeometryServer(backend="ref", clock=VirtualClock())
+        assert eng_.slo_monitor is None
+        eng_.submit_async(_chain2(), _pts(4))
+        eng_.drain()

@@ -1,0 +1,71 @@
+"""Trend gate: directional drift across the committed BENCH trajectory.
+
+The exact-match gate (``tools/check_bench.py``) pins a fresh run against
+the LATEST committed ``benchmarks/BENCH_*.json`` -- it cannot see a PR
+that regresses a counter and commits the regressed value, because the
+fresh run matches the new record exactly.  This gate reads the WHOLE
+committed trajectory (``repro.obs.bench_history``) and fails when any
+lower-is-better counter (launches, padded points, HBM bytes, lost
+requests, failures) worsened between consecutive committed records for
+the same row.  CI runs it in the profile-smoke lane:
+
+    PYTHONPATH=src python tools/bench_trend.py
+
+Exit status 0 = trajectory clean; 1 = directional regressions (each
+printed); 2 = fewer than two committed records (nothing to compare).
+``--report`` writes the markdown drift summary; ``--series row field``
+prints one counter's trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# keep `python tools/bench_trend.py` working from the repo root without
+# PYTHONPATH (the src layout, same shim as benchmarks/run.py)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs import bench_history  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python tools/bench_trend.py")
+    ap.add_argument("--bench-dir",
+                    default=os.path.join(_ROOT, "benchmarks"),
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--report", default=None, metavar="OUT.md",
+                    help="write the markdown drift summary here")
+    ap.add_argument("--series", nargs=2, default=None,
+                    metavar=("ROW", "FIELD"),
+                    help="print one counter's trajectory and exit")
+    args = ap.parse_args(argv)
+
+    history = bench_history.load_history(args.bench_dir)
+    if args.series:
+        row, field = args.series
+        for name, value in bench_history.series(history, row, field):
+            print(f"{name}: {value}")
+        return 0
+    if len(history) < 2:
+        print(f"bench_trend: only {len(history)} committed record(s) in "
+              f"{args.bench_dir}; nothing to compare", file=sys.stderr)
+        return 2
+    regressions = bench_history.find_regressions(history)
+    print(f"bench_trend: {len(history)} committed records "
+          f"({history[0].name} .. {history[-1].name})")
+    if args.report:
+        with open(args.report, "w") as f:
+            f.write(bench_history.drift_report(history))
+        print(f"bench_trend: wrote {args.report}")
+    for r in regressions:
+        print(f"  REGRESSION: {r}", file=sys.stderr)
+    if regressions:
+        return 1
+    print("  directional counters never worsened -- trajectory clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

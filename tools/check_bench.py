@@ -65,6 +65,20 @@ DETERMINISTIC_FIELDS = frozenset({
     # the virtual-clock traced soak are exact, and counters_identical=1
     # pins that tracing never steers the serving stack
     "trace_spans", "trace_events", "counters_identical",
+    # profiler attribution (profile_attrib rows): the folded span
+    # stream's counters plus the two exactness flags -- the attribution
+    # tree reproduces stats["launches"] and every observed/predicted
+    # HBM-byte ratio is exactly 1.0 (shared opcount/costmodel formula)
+    "events", "spans", "kernels", "launch_buckets", "pred_hbm_bytes",
+    "pred_flops", "pred_m1_cycles", "byte_ratio_exact",
+    "attribution_exact",
+    # SLO burn-rate monitor (slo_burn rows): the scripted error-budget
+    # train's alert count and its exact virtual fire/resolve instants,
+    # plus the monitored async drive's event flow
+    "latency_alerts_fired", "latency_first_fire_us",
+    "latency_first_resolve_us", "latency_bad_events",
+    "served_latency_events", "served_rejections_events",
+    "served_alerts_fired",
 })
 
 #: rows whose presence (in BOTH files) the gate insists on -- the launch
