@@ -27,6 +27,11 @@ exact-gated by the soak CI lane).  ``--profile`` records the analysis
 layer's rows (``profile_attrib``: span-stream attribution counters with
 the ``attribution_exact``/``byte_ratio_exact`` flags; ``slo_burn``:
 pinned virtual-clock alert instants), gated by the profile-smoke CI
+lane.  ``--scene`` records the animated scene-graph rows (``scene_*``:
+an N-frame edit/serve loop through the fold CSE cache whose fold counts
+equal the dirtied-subtree sizes, with bitwise scene-vs-apply equality
+flags on the float32 diagonal lane and the q8.7 lane, plus the
+fold-everything-from-scratch baseline), gated by the scene-smoke CI
 lane.  ``--out``
 overrides the JSON path (``--out ''`` disables the record; CI instead
 writes to a scratch path, gates on it with ``tools/check_bench.py``, and
@@ -105,6 +110,10 @@ def main(argv=None) -> None:
                     help="record profiler + SLO rows (span-stream "
                          "attribution counters with exactness flags, and "
                          "pinned virtual-clock alert instants)")
+    ap.add_argument("--scene", action="store_true",
+                    help="record animated scene-graph rows (incremental "
+                         "refold counters == dirtied-subtree sizes, "
+                         "bitwise equality flags, scratch-fold baseline)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="with --soak: write the traced soak's span "
                          "stream as byte-deterministic Chrome-trace JSON")
@@ -123,8 +132,8 @@ def main(argv=None) -> None:
     sys.path.insert(0, root)
     from benchmarks import (autotune_bench, chaos_bench, fixedpoint_bench,
                             graphics_bench, kernel_bench, paper_tables,
-                            profile_bench, roofline_bench, serving_bench,
-                            soak_bench)
+                            profile_bench, roofline_bench, scene_bench,
+                            serving_bench, soak_bench)
 
     rows: list[str] = []
     print("== paper tables (3/4/5): M1 emulator + Intel cycle models ==")
@@ -152,6 +161,10 @@ def main(argv=None) -> None:
     if args.profile:
         print("\n== profile (span-stream attribution + SLO burn rate) ==")
         rows += profile_bench.run(smoke=args.smoke)
+    if args.scene:
+        print("\n== scene (animated scene graph: fold CSE + incremental "
+              "refold) ==")
+        rows += scene_bench.run(smoke=args.smoke)
     if not args.smoke:
         print("\n== roofline (from multi-pod dry-run) ==")
         rows += roofline_bench.run()

@@ -1,0 +1,251 @@
+"""Animated scene benchmark: per-frame fold cost is O(changed nodes).
+
+``benchmarks/run.py --scene`` runs this module.  Three row groups over an
+animated N-frame scene (a shared world -> camera prefix, B branches, L
+leaves per branch, one branch re-posed per frame):
+
+  * ``scene_anim`` -- the float32 lane on a DIAGONAL scene (the plan
+    kind whose packed serving results are exactly equal to per-request
+    ``apply``): every frame edits one branch (``set_local``), dirties
+    exactly that subtree, and serves every leaf's points through
+    ``GeometryServer.submit_scene``.  The gated counters are the
+    tentpole claim: ``folds == dirtied`` (fold work per frame == changed
+    nodes, NOT scene size), ``cse_hits`` (clean prefixes served from the
+    shared ``FoldCache``), deterministic ``launches``, and ``equal`` --
+    every scene-served result bitwise equal to the independent
+    per-request ``TransformChain.apply`` oracle.
+  * ``scene_anim_q8_7`` -- the same animation discipline on a 3D
+    MATRIX-kind scene (camera rotation) through the int16 q8.7 lane,
+    where packed-vs-apply equality is bitwise on every plan kind;
+    additionally each leaf is submitted BOTH scene-cached and as its
+    plain world chain in the same float32 flush and the two results
+    compared bitwise (``scene_vs_chain_equal`` -- the cached fold is the
+    same fold).
+  * ``scene_fold_scratch`` -- the O(scene) baseline the scene graph
+    replaces: folding every leaf's whole world chain from scratch each
+    frame.  Its deterministic fold count is ``leaves`` per frame vs the
+    scene's ``dirtied`` per frame; ``fold_ratio_vs_scene`` records the
+    ratio (and each scratch fold walks the WHOLE path, so the real work
+    ratio is larger still).
+
+All counter fields are deterministic (fixed tree, fixed edit schedule,
+frame-indexed float32 parameters), so ``tools/check_bench.py`` gates
+them exactly in the scene-smoke CI lane.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import scene, serving
+from repro.core import transform_chain as tc
+
+SCENE_SEED = 3104
+
+
+def _branch_pose(branch: int, frame: int) -> tc.TransformChain:
+    """The animated branch-root local: frame-indexed float32 content so
+    every edit is FRESH content (never a revert-to-cached hit) and every
+    CI run folds bit-identical parameters."""
+    return (tc.TransformChain.identity(2)
+            .scale(np.float32(1.0 + 0.125 * branch))
+            .translate(np.float32(0.25 * frame + branch),
+                       np.float32(0.5 * branch)))
+
+
+def _build_diag_scene(branches: int, leaves: int):
+    """World -> camera -> B branch roots -> L leaves per branch, all
+    translate/scale/affine locals (diagonal plans: the float32 packed
+    lane is exactly equal to apply)."""
+    g = scene.SceneGraph(2, cache=scene.FoldCache())
+    g.add("world", tc.TransformChain.identity(2)
+          .translate(np.float32(0.5), np.float32(-0.25)))
+    g.add("camera", tc.TransformChain.identity(2)
+          .affine((np.float32(0.5), np.float32(0.5)),
+                  (np.float32(1.0), np.float32(2.0))), parent="world")
+    names = []
+    for b in range(branches):
+        g.add(f"b{b}", _branch_pose(b, 0), parent="camera")
+        for leaf in range(leaves):
+            names.append(g.add(
+                f"b{b}/l{leaf}",
+                tc.TransformChain.identity(2)
+                .affine(np.float32(1.0 + 0.0625 * leaf),
+                        (np.float32(0.125 * leaf), np.float32(b))),
+                parent=f"b{b}"))
+    return g, names
+
+
+def _pose3(branch: int, frame: int) -> tc.TransformChain:
+    return (tc.TransformChain.identity(3)
+            .scale(np.float32(1.0 + 0.0625 * branch))
+            .translate(np.float32(0.0625 * frame),
+                       np.float32(0.125 * branch), np.float32(0.0)))
+
+
+def _build_matrix_scene(branches: int, leaves: int):
+    """Same tree shape in 3D with a rotating camera: every leaf's world
+    chain is matrix kind (the q8.7 lane is bitwise on it; the float lane
+    carries the engine's documented last-ULP envelope)."""
+    g = scene.SceneGraph(3, cache=scene.FoldCache())
+    g.add("world", tc.TransformChain.identity(3)
+          .translate(np.float32(0.25), np.float32(0.0), np.float32(0.5)))
+    g.add("camera", tc.TransformChain.identity(3)
+          .rotate(np.float32(0.4), axis=1)
+          .translate(np.float32(0.0), np.float32(0.0), np.float32(-2.0)),
+          parent="world")
+    names = []
+    for b in range(branches):
+        g.add(f"b{b}", _pose3(b, 0), parent="camera")
+        for leaf in range(leaves):
+            names.append(g.add(
+                f"b{b}/l{leaf}",
+                tc.TransformChain.identity(3)
+                .affine(np.float32(0.5),
+                        (np.float32(0.125 * leaf), np.float32(0.0625 * b),
+                         np.float32(0.0))),
+                parent=f"b{b}"))
+    return g, names
+
+
+def _leaf_points(rng, n_leaves: int, n_points: int, dim: int):
+    return [rng.uniform(-2, 2, (n_points, dim)).astype(np.float32)
+            for _ in range(n_leaves)]
+
+
+def _bytes_eq(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return a.dtype == b.dtype and a.shape == b.shape \
+        and a.tobytes() == b.tobytes()
+
+
+def _animate(g, leaf_names, pts, srv, frames, branches, pose,
+             *, qformat=None, vs_chain=False):
+    """Run the edit -> serve -> verify frame loop; returns the counter
+    dict.  Serving wall-clock accumulates around submit+flush only (the
+    oracle comparison is verification, not the thing being timed)."""
+    serve_s = 0.0
+    equal = True
+    vs_equal = True
+    folds = dirtied = 0
+    for frame in range(1, frames + 1):
+        edit = f"b{(frame - 1) % branches}"
+        before = scene.stats["folds"]
+        d = g.set_local(edit, pose((frame - 1) % branches, frame))
+        t0 = time.perf_counter()
+        tickets = [srv.submit_scene(g, n, p, qformat=qformat)
+                   for n, p in zip(leaf_names, pts)]
+        chain_tickets = [srv.submit(g.world_chain(n), p)
+                         for n, p in zip(leaf_names, pts)] if vs_chain \
+            else []
+        scene_tickets = [srv.submit_scene(g, n, p)
+                         for n, p in zip(leaf_names, pts)] if vs_chain \
+            else []
+        res = srv.flush()
+        serve_s += time.perf_counter() - t0
+        folds += scene.stats["folds"] - before
+        dirtied += d
+        base = tickets[0]       # flush() results are per-flush positional
+        for n, p, t in zip(leaf_names, pts, tickets):
+            oracle = g.world_chain(n).apply(p, backend=srv.backend,
+                                            dtype=qformat)
+            equal = equal and _bytes_eq(res[t - base], oracle)
+        for tc_, ts_ in zip(chain_tickets, scene_tickets):
+            vs_equal = vs_equal and _bytes_eq(res[tc_ - base],
+                                              res[ts_ - base])
+    return {"serve_us": serve_s * 1e6, "equal": equal,
+            "vs_equal": vs_equal, "folds": folds, "dirtied": dirtied}
+
+
+def _scene_rows(tag: str, frames: int, branches: int, leaves: int,
+                n_points: int) -> list[str]:
+    rng = np.random.default_rng(SCENE_SEED)
+
+    # --- float32 lane, diagonal scene: bitwise equality gate ------------
+    g, leaf_names = _build_diag_scene(branches, leaves)
+    pts = _leaf_points(rng, len(leaf_names), n_points, 2)
+    srv = serving.GeometryServer(backend="ref")
+    for n, p in zip(leaf_names, pts):       # warm frame: plans + cold folds
+        srv.submit_scene(g, n, p)
+    srv.flush()
+    scene.reset_stats()
+    serving.reset_stats()
+    r = _animate(g, leaf_names, pts, srv, frames, branches, _branch_pose)
+    launches = serving.stats["launches"]
+    n_nodes, n_leaves = len(g), len(leaf_names)
+    assert r["folds"] == r["dirtied"], (r["folds"], r["dirtied"])
+    print(f"[scene] {frames}-frame diag scene ({n_nodes} nodes, "
+          f"{n_leaves} leaves): {r['folds']} folds for {r['dirtied']} "
+          f"dirtied nodes ({r['folds'] // frames}/frame vs {n_nodes} "
+          f"nodes), {launches} launches, equal={r['equal']}")
+    rows = [
+        f"scene_anim{tag},{r['serve_us'] / frames:.1f},"
+        f"frames={frames};nodes={n_nodes};leaves={n_leaves};"
+        f"requests={n_leaves * frames};dirtied={r['dirtied']};"
+        f"folds={r['folds']};folds_per_frame={r['folds'] // frames};"
+        f"cse_hits={scene.stats['cse_hits']};"
+        f"refolds={scene.stats['refolds']};launches={launches};"
+        f"equal={r['equal']}",
+    ]
+
+    # --- q8.7 lane, matrix scene (+ scene-vs-chain float check) ---------
+    g3, leaf3 = _build_matrix_scene(branches, leaves)
+    pts3 = _leaf_points(rng, len(leaf3), n_points, 3)
+    srv3 = serving.GeometryServer(backend="ref")
+    for n, p in zip(leaf3, pts3):
+        srv3.submit_scene(g3, n, p, qformat="q8.7")
+        srv3.submit_scene(g3, n, p)
+        srv3.submit(g3.world_chain(n), p)
+    srv3.flush()
+    scene.reset_stats()
+    serving.reset_stats()
+    r3 = _animate(g3, leaf3, pts3, srv3, frames, branches, _pose3,
+                  qformat="q8.7", vs_chain=True)
+    launches3 = serving.stats["launches"]
+    assert r3["folds"] == r3["dirtied"], (r3["folds"], r3["dirtied"])
+    print(f"[scene] {frames}-frame matrix scene, q8.7 lane: "
+          f"{r3['folds']} folds for {r3['dirtied']} dirtied nodes, "
+          f"{launches3} launches, q_equal={r3['equal']}, "
+          f"scene_vs_chain_equal={r3['vs_equal']}")
+    rows.append(
+        f"scene_anim_q8_7{tag},{r3['serve_us'] / frames:.1f},"
+        f"frames={frames};nodes={len(g3)};leaves={len(leaf3)};"
+        f"requests={len(leaf3) * frames * 3};dirtied={r3['dirtied']};"
+        f"folds={r3['folds']};folds_per_frame={r3['folds'] // frames};"
+        f"cse_hits={scene.stats['cse_hits']};launches={launches3};"
+        f"equal={r3['equal']};scene_vs_chain_equal={r3['vs_equal']}")
+
+    # --- the O(scene) baseline: every leaf refolds from scratch ---------
+    t0 = time.perf_counter()
+    scratch_folds = 0
+    for frame in range(1, frames + 1):
+        g.set_local(f"b{(frame - 1) % branches}",
+                    _branch_pose((frame - 1) % branches, frames + frame))
+        for n in leaf_names:
+            c = g.world_chain(n)
+            tc.fold_structure(c.structure, c.params)
+            scratch_folds += 1
+    scratch_us = (time.perf_counter() - t0) * 1e6
+    per_frame_scene = r["folds"] // frames
+    ratio = scratch_folds / max(1, r["folds"])
+    print(f"[scene] scratch baseline: {scratch_folds} whole-path folds "
+          f"vs {r['folds']} incremental ({ratio:.2f}x fold count; each "
+          f"scratch fold also walks the full path)")
+    rows.append(
+        f"scene_fold_scratch{tag},{scratch_us / frames:.1f},"
+        f"frames={frames};leaves={n_leaves};folds={scratch_folds};"
+        f"folds_per_frame={scratch_folds // frames};"
+        f"fold_ratio_vs_scene={ratio:.2f}x;"
+        f"scene_folds_per_frame={per_frame_scene}")
+    return rows
+
+
+def run(smoke: bool = False) -> list[str]:
+    """Entry point for ``benchmarks/run.py --scene``."""
+    tag = "_smoke" if smoke else ""
+    if smoke:
+        return _scene_rows(tag, frames=6, branches=4, leaves=4,
+                           n_points=64)
+    return _scene_rows(tag, frames=30, branches=8, leaves=8,
+                       n_points=512)

@@ -108,6 +108,7 @@ def clear_plan_cache() -> None:
 
 
 def reset_stats() -> None:
+    """Zero every chain counter (benchmarks snapshot deltas from here)."""
     for k in stats:
         stats[k] = 0
 
@@ -171,10 +172,19 @@ def _mat_parts(val, dim: int) -> tuple[np.ndarray, np.ndarray]:
                      f"({dim + 1},{dim + 1}); got {m.shape}")
 
 
-def _fold_diag(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
-    """Fold a pure-diagonal chain to (s, t) with q = s (.) p + t."""
-    s = np.ones((dim,), np.float32)
-    t = np.zeros((dim,), np.float32)
+def _fold_diag(dim: int, kinds, params,
+               carry=None) -> tuple[np.ndarray, np.ndarray]:
+    """Fold a pure-diagonal chain to (s, t) with q = s (.) p + t.
+
+    ``carry`` resumes the fold from a saved (s, t) state instead of the
+    identity -- the loop body is shared, so resuming is bit-identical to
+    folding the concatenated chain in one call (see ``fold_carry_extend``).
+    """
+    if carry is None:
+        s = np.ones((dim,), np.float32)
+        t = np.zeros((dim,), np.float32)
+    else:
+        s, t = carry
     for (kind, _), val in zip(kinds, params):
         if kind == "T":
             t = t + _vec(val, dim)
@@ -187,10 +197,18 @@ def _fold_diag(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
     return s, t
 
 
-def _fold_matrix(dim: int, kinds, params) -> tuple[np.ndarray, np.ndarray]:
-    """Fold a general chain to (A, t) with q = p @ A + t."""
-    a = np.eye(dim, dtype=np.float32)
-    t = np.zeros((dim,), np.float32)
+def _fold_matrix(dim: int, kinds, params,
+                 carry=None) -> tuple[np.ndarray, np.ndarray]:
+    """Fold a general chain to (A, t) with q = p @ A + t.
+
+    ``carry`` resumes the fold from a saved (A, t) state (same loop body
+    as the from-identity fold, hence bit-identical -- see
+    ``fold_carry_extend``)."""
+    if carry is None:
+        a = np.eye(dim, dtype=np.float32)
+        t = np.zeros((dim,), np.float32)
+    else:
+        a, t = carry
     for (kind, axis), val in zip(kinds, params):
         if kind == "T":
             t = t + _vec(val, dim)
@@ -228,7 +246,7 @@ def _map_bounds(lo: np.ndarray, hi: np.ndarray, s: np.ndarray,
     return np.minimum(a, b), np.maximum(a, b)
 
 
-def _fold_projective(dim: int, kinds, params):
+def _fold_projective(dim: int, kinds, params, carry=None):
     """Fold a projective chain to (H (d+1, d+1), lo (d,), hi (d,)) with
     q = divide([p, 1] @ H) and an inclusive axis-aligned cull against
     [lo, hi] in the OUTPUT space (+-inf where no cull was recorded).
@@ -240,11 +258,20 @@ def _fold_projective(dim: int, kinds, params):
     ``cull`` primitive sits and pushed forward through later diagonal
     primitives (a viewport map); a rotation, custom matrix, or projective
     AFTER a cull would need non-axis-aligned bounds and is rejected.
+
+    Returns the full carry (h, lo, hi, culled); ``fold_structure`` strips
+    the ``culled`` flag.  ``carry`` resumes from a saved state (same loop
+    body, hence bit-identical -- see ``fold_carry_extend``); the carried
+    ``culled`` flag keeps the after-cull primitive restrictions exact
+    across the resume boundary.
     """
-    h = np.eye(dim + 1, dtype=np.float32)
-    lo = np.full((dim,), -np.inf, np.float32)
-    hi = np.full((dim,), np.inf, np.float32)
-    culled = False
+    if carry is None:
+        h = np.eye(dim + 1, dtype=np.float32)
+        lo = np.full((dim,), -np.inf, np.float32)
+        hi = np.full((dim,), np.inf, np.float32)
+        culled = False
+    else:
+        h, lo, hi, culled = carry
     for (kind, axis), val in zip(kinds, params):
         if kind == "C":
             lo = np.maximum(lo, _vec(val[0], dim))
@@ -287,7 +314,7 @@ def _fold_projective(dim: int, kinds, params):
                 raise ValueError(f"projective matrix must be "
                                  f"({dim + 1},{dim + 1}); got {hk.shape}")
         h = (h @ hk).astype(np.float32)
-    return h, lo, hi
+    return h, lo, hi, culled
 
 
 # -- traced-parameter fallback (jnp fold) ------------------------------------
@@ -372,15 +399,91 @@ def fold_structure(structure: tuple, params) -> tuple[np.ndarray, ...]:
     """Fold ONE parameter set for ``structure``: float32 (s, t) if the
     structure is diagonal, (A, t) if it is a general affine, and
     (H, lo, hi) if it is projective.  This host fold is shared verbatim
-    by ``TransformChain.apply`` and the serving engine's bucket packing, so
-    a request's composed parameters are bit-identical however it is
-    dispatched."""
-    dim, kinds = structure
-    if structure_is_projective(structure):
-        return _fold_projective(dim, kinds, params)
-    if structure_is_diagonal(structure):
-        return _fold_diag(dim, kinds, params)
-    return _fold_matrix(dim, kinds, params)
+    by ``TransformChain.apply``, the serving engine's bucket packing, and
+    (through the carry API below) the scene graph's cached subchain
+    folds, so a request's composed parameters are bit-identical however
+    it is dispatched."""
+    kind = plan_kind_of(structure)
+    dim = structure[0]
+    carry = fold_carry_extend(kind, dim, fold_carry_identity(kind, dim),
+                              structure[1], params)
+    return fold_carry_finish(kind, carry)
+
+
+# -- incremental (carry-state) folds ----------------------------------------
+#
+# The scene graph (``repro.scene``) folds shared chain prefixes once and
+# extends each node's world fold from its parent's saved state.  For the
+# bitwise contract to survive that, the incremental fold must BE the
+# one-pass fold: the ``_fold_*`` loops above thread an explicit carry, and
+# ``fold_carry_extend`` re-enters the same loop with a saved carry.  The
+# op sequence is therefore *identical* to folding the concatenated chain
+# in one ``fold_structure`` call -- bit-identical results by construction,
+# not by accident of float algebra.  The carry per plan kind:
+#
+#   diag        (s, t)                  q = s (.) p + t
+#   matrix      (A, t)                  q = p @ A + t
+#   projective  (H, lo, hi, culled)     q = divide([p, 1] @ H), cull flag
+#                                       carried so the after-cull
+#                                       restrictions stay exact
+#
+# A subchain folds under the plan kind of the FULL chain it belongs to
+# (the lattice diag < matrix < projective is monotone under
+# concatenation), so a diagonal prefix extended by a rotating suffix is
+# folded with the matrix loop from the start -- exactly what the one-pass
+# fold of the whole chain does.
+
+def fold_carry_identity(kind: str, dim: int) -> tuple:
+    """The identity carry state for an incremental fold of plan kind
+    ``kind`` ("diag" | "matrix" | "projective") in ``dim`` dimensions --
+    ``fold_carry_extend`` from this state reproduces ``fold_structure``
+    bit for bit."""
+    if kind == "diag":
+        return (np.ones((dim,), np.float32), np.zeros((dim,), np.float32))
+    if kind == "matrix":
+        return (np.eye(dim, dtype=np.float32),
+                np.zeros((dim,), np.float32))
+    if kind == "projective":
+        return (np.eye(dim + 1, dtype=np.float32),
+                np.full((dim,), -np.inf, np.float32),
+                np.full((dim,), np.inf, np.float32),
+                False)
+    raise ValueError(f"unknown fold kind {kind!r}")
+
+
+def fold_carry_extend(kind: str, dim: int, carry: tuple, kinds,
+                      params) -> tuple:
+    """Extend a saved fold carry by the primitives ``(kinds, params)`` --
+    the incremental half of ``fold_structure``.  Running the concatenated
+    chain through one ``fold_structure`` call and running it here in
+    pieces execute the SAME loop over the same primitives, so the two are
+    bit-identical; the scene graph's fold-CSE correctness rests on this.
+
+    ``kind`` must be the plan kind of the FULL chain the pieces belong to
+    (``plan_kind_of`` of the concatenated structure); a subchain whose
+    primitives cannot be expressed under ``kind`` raises ``ValueError``.
+    """
+    have = {k for k, _ in kinds}
+    if kind == "diag":
+        if have - _DIAG_KINDS:
+            raise ValueError(f"subchain kinds {have - _DIAG_KINDS} cannot "
+                             "fold under a diagonal carry")
+        return _fold_diag(dim, kinds, params, carry)
+    if kind == "matrix":
+        if have & _PROJ_KINDS:
+            raise ValueError(f"subchain kinds {have & _PROJ_KINDS} cannot "
+                             "fold under an affine-matrix carry")
+        return _fold_matrix(dim, kinds, params, carry)
+    if kind == "projective":
+        return _fold_projective(dim, kinds, params, carry)
+    raise ValueError(f"unknown fold kind {kind!r}")
+
+
+def fold_carry_finish(kind: str, carry: tuple) -> tuple[np.ndarray, ...]:
+    """Turn a fold carry into the public folded-parameter tuple that
+    ``fold_structure`` returns (drops the projective carry's internal
+    ``culled`` flag)."""
+    return carry[:3] if kind == "projective" else carry
 
 
 # -- plans -------------------------------------------------------------------
@@ -413,6 +516,7 @@ def _compile_q(structure: tuple, backend: str, qname: str) -> Plan:
 
     if kind == "diag":
         def body(folded_q, pts2):
+            """Jitted q-format diagonal scale+translate over (N, dim)."""
             _count_trace("chain_diag_q", backend)
             s, t = folded_q
             cfg = tuning.config_for("chain_diag_q", backend, fmt.name,
@@ -421,6 +525,7 @@ def _compile_q(structure: tuple, backend: str, qname: str) -> Plan:
                                    backend=backend, config=cfg)
     else:
         def body(folded_q, pts2):
+            """Jitted q-format fused matmul+translate over (N, dim)."""
             _count_trace("chain_apply_q", backend)
             a, t = folded_q
             cfg = tuning.config_for("chain_apply_q", backend, fmt.name,
@@ -446,6 +551,7 @@ def _compile(structure: tuple, backend: str) -> Plan:
     # agree bitwise.
     if kind == "diag":
         def body(folded, pts2):
+            """Jitted diagonal scale+translate over (N, dim)."""
             _count_trace("chain_diag", backend)
             s, t = folded
             cfg = tuning.config_for("chain_diag", backend,
@@ -453,6 +559,7 @@ def _compile(structure: tuple, backend: str) -> Plan:
             return _k_chain_diag(pts2, s, t, backend=backend, config=cfg)
     elif kind == "matrix":
         def body(folded, pts2):
+            """Jitted fused matmul+translate over (N, dim)."""
             _count_trace("chain_apply", backend)
             a, t = folded
             cfg = tuning.config_for("chain_apply", backend,
@@ -460,6 +567,7 @@ def _compile(structure: tuple, backend: str) -> Plan:
             return _k_chain_apply(pts2, a, t, backend=backend, config=cfg)
     else:
         def body(folded, pts2):
+            """Jitted homography apply + perspective divide + cull."""
             _count_trace("chain_project", backend)
             h, lo, hi = folded
             cfg = tuning.config_for("chain_project", backend,
@@ -509,6 +617,7 @@ class TransformChain:
 
     @staticmethod
     def identity(dim: int = 2) -> "TransformChain":
+        """An empty chain in ``dim`` dimensions (2 or 3)."""
         if dim not in (2, 3):
             raise ValueError(f"dim must be 2 or 3, got {dim}")
         return TransformChain(dim=dim)

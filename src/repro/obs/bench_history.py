@@ -39,6 +39,11 @@ LOWER_IS_BETTER = frozenset({
     "launches", "shards", "padded_points", "hbm_bytes",
     "padding_waste", "extra_launches",
     "lost", "mismatches", "failed_requests", "launch_failures",
+    # scene-graph fold economy (scene_* rows): fold work creeping up for
+    # the same animated edit schedule means the CSE cache or the dirty
+    # propagation regressed (cse_hits is deliberately absent: it is
+    # exact-gated, and "more hits" is not monotonically good)
+    "folds", "folds_per_frame", "refolds", "dirtied",
 })
 
 

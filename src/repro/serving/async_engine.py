@@ -92,6 +92,7 @@ class Ticket:
         self._value = _UNSET
 
     def done(self) -> bool:
+        """Whether the ticket has resolved (value or typed error)."""
         return self._value is not _UNSET
 
     def result(self):
@@ -165,7 +166,8 @@ class _Group:
 
     @property
     def oldest_arrival(self) -> float:
-        return self.entries[0].arrival   # entries append in arrival order
+        """Arrival time of the head entry (appends are in arrival order)."""
+        return self.entries[0].arrival
 
     def due_in(self, now: float, slo: SLOConfig) -> float:
         """Clock seconds until this group's coupled deadline fires
@@ -246,10 +248,11 @@ class AsyncGeometryServer:
 
     @property
     def queue_depth(self) -> int:
+        """Requests currently queued behind admission control."""
         return self._admission.depth
 
     def submit_async(self, chain, points, *, tenant: str = "default",
-                     qformat=None) -> Ticket:
+                     qformat=None, fold=None) -> Ticket:
         """Admit + validate one request; returns its awaitable ticket.
 
         Gate order: admission first (backpressure must shed load BEFORE
@@ -257,7 +260,13 @@ class AsyncGeometryServer:
         boundary.  Raises the typed taxonomy either way --
         ``QueueFullError`` / ``RateLimitError`` with stable codes for
         backpressure, the intake family for malformed payloads -- so a
-        caller's error handling is one ``except RequestError``."""
+        caller's error handling is one ``except RequestError``.
+
+        ``fold`` forwards precomputed folded parameters to the engine's
+        validation boundary (see ``GeometryServer.validate``): the
+        scene path uses it to serve a cached world fold, and the
+        injected value must be bit-identical to ``chain.fold()`` so the
+        sync/async equivalence contract is untouched."""
         trc = obst.active()
         sid = trc.begin("request.submit", tenant=tenant) \
             if trc.enabled else None
@@ -273,7 +282,8 @@ class AsyncGeometryServer:
                         code=getattr(e, "code", type(e).__name__))
             raise
         try:
-            p = self._server.validate(chain, points, qformat=qformat)
+            p = self._server.validate(chain, points, qformat=qformat,
+                                      fold=fold)
         except BaseException as e:
             # never queued: the slot (but not the spent rate token --
             # the tenant did submit) goes back
@@ -302,6 +312,22 @@ class AsyncGeometryServer:
         if sid is not None:
             trc.end(sid, ticket=p.ticket, outcome="admitted")
         return ticket
+
+    def submit_scene_async(self, scene, name: str, points, *,
+                           tenant: str = "default", qformat=None) -> Ticket:
+        """Scene-aware ``submit_async``: the request's chain is the
+        node's world chain and its fold comes from the scene's shared
+        ``FoldCache`` (``SceneGraph.world_fold``), so a burst of
+        requests under one prefix folds it once.  Admission, grouping,
+        the flush policy and the sync/async bitwise-equivalence
+        contract are all the ordinary ``submit_async`` path -- the
+        cached fold is bit-identical to ``chain.fold()`` by
+        construction (``GeometryServer.submit_scene`` documents the
+        equality chain)."""
+        chain = scene.world_chain(name)
+        fold = scene.world_fold(name) if len(chain) else None
+        return self.submit_async(chain, points, tenant=tenant,
+                                 qformat=qformat, fold=fold)
 
     def _group_key(self, p: engine._Pending) -> tuple:
         """The flush-policy grouping key: the engine's own bucket key,

@@ -199,10 +199,12 @@ class Projected(np.ndarray):
 
     @property
     def mask(self) -> np.ndarray | None:
+        """The cull mask ``_projected()`` attached, or None on a view."""
         return self._mask
 
     @mask.setter
     def mask(self, value: np.ndarray | None) -> None:
+        """Attach a cull mask (only ``_projected()`` should set this)."""
         self._mask = value
 
 
@@ -241,6 +243,7 @@ def _compile_batch_q(structure: tuple, backend: str,
 
     if kind == "diag":
         def body(folded, pts3):
+            """Jitted q-format diagonal transform over a (B, L) bucket."""
             _count_trace("chain_diag_batch_q", backend, fmt.name,
                          pts3.shape[0] * pts3.shape[1])
             s, t = folded
@@ -250,6 +253,7 @@ def _compile_batch_q(structure: tuple, backend: str,
                                       backend=backend, config=cfg)
     else:
         def body(folded, pts3):
+            """Jitted q-format matmul transform over a (B, L) bucket."""
             _count_trace("chain_apply_batch_q", backend, fmt.name,
                          pts3.shape[0] * pts3.shape[1])
             a, t = folded
@@ -272,6 +276,7 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
     # every config bit-identical (see core.transform_chain._compile).
     if kind == "diag":
         def body(folded, pts3):
+            """Jitted diagonal transform over a (B, L) bucket."""
             _count_trace("chain_diag_batch", backend, str(pts3.dtype),
                          pts3.shape[0] * pts3.shape[1])
             s, t = folded
@@ -281,6 +286,7 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
             return chain_diag_batch(pts3, s, t, backend=backend, config=cfg)
     elif kind == "matrix":
         def body(folded, pts3):
+            """Jitted matmul transform over a (B, L) bucket."""
             _count_trace("chain_apply_batch", backend, str(pts3.dtype),
                          pts3.shape[0] * pts3.shape[1])
             a, t = folded
@@ -290,6 +296,7 @@ def _compile_batch(structure: tuple, backend: str) -> BatchPlan:
             return chain_apply_batch(pts3, a, t, backend=backend, config=cfg)
     else:
         def body(folded, pts3):
+            """Jitted projective transform + cull over a (B, L) bucket."""
             _count_trace("chain_project_batch", backend, str(pts3.dtype),
                          pts3.shape[0] * pts3.shape[1])
             h, lo, hi = folded
@@ -420,10 +427,12 @@ class BucketReport:
 
     @property
     def waste(self) -> float:
+        """Fraction of padded points that carried no payload."""
         return 1.0 - self.payload_points / max(1, self.padded_points)
 
     @property
     def launches_saved(self) -> int:
+        """Kernel launches avoided by batching (requests - launches)."""
         return self.requests - self.launches
 
 
@@ -539,8 +548,33 @@ class GeometryServer:
         reach a packed bucket and take its neighbours down with it."""
         return self.enqueue(self.validate(chain, points, qformat=qformat))
 
+    def submit_scene(self, scene, name: str, points, *,
+                     qformat=None) -> int:
+        """Queue one request against a scene node: the chain is the
+        node's world chain (``SceneGraph.world_chain``) and the fold is
+        the scene's CACHED world fold, resolved through the shared
+        ``FoldCache`` instead of refolded here -- thousands of requests
+        attached under a common prefix fold that prefix once, not once
+        per request.
+
+        Everything downstream is the ordinary serving lane: the same
+        (structure, backend, dtype, size-class) bucket key, the same
+        packed kernels, the same typed validation boundary, the same
+        ``qformat=`` fixed-point routing (the cached fold quantises
+        through ``quantize.quantize_fold`` at pack time exactly like a
+        per-request fold).  The cached fold is bit-identical to
+        ``chain.fold()`` by the carry-fold construction
+        (``transform_chain.fold_carry_extend``), so results are bitwise
+        equal to submitting ``scene.world_chain(name)`` through
+        ``submit`` -- and to the per-request ``apply`` oracle under the
+        engine's usual equality contract."""
+        chain = scene.world_chain(name)
+        fold = scene.world_fold(name) if len(chain) else None
+        return self.enqueue(self.validate(chain, points, qformat=qformat,
+                                          fold=fold))
+
     def validate(self, chain: tc.TransformChain, points, *,
-                 qformat=None) -> "_Pending":
+                 qformat=None, fold=None) -> "_Pending":
         """The intake half of ``submit``: assign a ticket id, run the
         full validation boundary, and return the queue entry WITHOUT
         queueing it.  The continuous-batching front-end
@@ -549,14 +583,21 @@ class GeometryServer:
         flush policy schedules them, so the two paths share one
         validation boundary and one ticket sequence.  Rejected
         submissions burn their id: the id in a typed error is never
-        reused."""
+        reused.
+
+        ``fold`` injects precomputed folded parameters (the scene
+        graph's cached world fold) in place of the ``chain.fold()`` this
+        method would otherwise run; the injected fold MUST be
+        bit-identical to ``chain.fold()`` -- the scene cache guarantees
+        that by construction -- and passes through the same finiteness /
+        q-overflow validation either way."""
         ticket = self._ticket
         self._ticket += 1
         trc = obst.active()
         sid = trc.begin("request.validate", ticket=ticket) \
             if trc.enabled else None
         try:
-            p = self._validate(chain, points, qformat, ticket)
+            p = self._validate(chain, points, qformat, ticket, fold=fold)
         except errors.RequestError as e:
             self._bump("rejected_requests")
             if sid is not None:
@@ -594,9 +635,11 @@ class GeometryServer:
         self.last_report = []
 
     def _validate(self, chain: tc.TransformChain, points, qformat,
-                  ticket: int) -> _Pending:
+                  ticket: int, fold=None) -> _Pending:
         """Build the queue entry, raising the typed taxonomy on anything
-        the packed lane could choke on later."""
+        the packed lane could choke on later.  ``fold`` skips the
+        ``chain.fold()`` recompute (scene-cached folds); every check
+        downstream of the fold runs on the injected value unchanged."""
         cfg = self.fault_config
         # a real copy, not a view: the queue must be immune to callers
         # mutating their buffer between submit and flush
@@ -620,9 +663,11 @@ class GeometryServer:
                 and not np.isfinite(pts).all():
             raise errors.NonFiniteError(
                 "points contain NaN/Inf", ticket=ticket)
-        fold = None
-        if len(chain):
-            fold = chain.fold()
+        if not len(chain):
+            fold = None
+        else:
+            if fold is None:
+                fold = chain.fold()
             if cfg.validate_finite:
                 # projective folds legitimately carry +/-inf cull bounds
                 parts = fold[:1] if chain.is_projective else fold
@@ -662,6 +707,7 @@ class GeometryServer:
 
     @property
     def pending(self) -> int:
+        """Requests submitted but not yet flushed."""
         return len(self._pending)
 
     # -- execution -----------------------------------------------------------

@@ -79,6 +79,13 @@ DETERMINISTIC_FIELDS = frozenset({
     "latency_first_resolve_us", "latency_bad_events",
     "served_latency_events", "served_rejections_events",
     "served_alerts_fired",
+    # scene-graph counters (scene_* rows): the animated edit schedule is
+    # fixed and the fold CSE is content-keyed, so fold work (== dirtied
+    # subtree sizes), cache hits, and the bitwise equality flags are all
+    # exact -- folds drifting up means the incremental-refold claim broke
+    "frames", "nodes", "leaves", "dirtied", "folds", "folds_per_frame",
+    "cse_hits", "refolds", "equal", "scene_vs_chain_equal",
+    "fold_ratio_vs_scene", "scene_folds_per_frame",
 })
 
 #: rows whose presence (in BOTH files) the gate insists on -- the launch
@@ -88,6 +95,7 @@ DEFAULT_REQUIRED = (
     "chain_serving_batched_smoke",
     "fixedpoint_serving_q8_7_smoke",
     "chaos_soak_smoke",
+    "scene_anim_smoke",
 )
 
 MIN_OVERLAP = 10

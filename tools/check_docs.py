@@ -1,22 +1,37 @@
-"""Docs link checker: every relative markdown link must resolve.
+"""Docs checker: links must resolve, and quickstart commands must run.
 
-Scans the given markdown files (or every ``*.md`` under given
-directories) for ``[text](target)`` links, skips absolute URLs and
-anchors, and verifies each remaining target exists relative to the file
-that references it.  CI runs this over README.md, docs/, tests/ and
-benchmarks/ so documentation cannot point at files that moved or never
-existed.
+Two passes over the given markdown files (or every ``*.md`` under given
+directories):
+
+1. **Links** (always): every relative ``[text](target)`` link must point
+   at a file that exists relative to the referencing document --
+   absolute URLs and ``#`` anchors are skipped.
+2. **Commands** (``--exec``): every fenced code block tagged ``sh`` is a
+   quickstart the reader will paste, so each command in it must exit 0
+   when run from the repo root.  Comment lines and blank lines are
+   skipped, trailing-backslash continuations join, and each command gets
+   its own subprocess (no state leaks between commands beyond the
+   filesystem).  CI's docs job runs the exec pass over README.md and
+   docs/, which is what keeps documented commands from rotting.
 
     python tools/check_docs.py README.md docs tests/README.md
+    python tools/check_docs.py --exec README.md docs
 """
 from __future__ import annotations
 
+import argparse
 import pathlib
 import re
+import subprocess
 import sys
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+#: only blocks explicitly tagged as shell are executable quickstarts;
+#: untagged fences (ASCII diagrams, span trees) and other languages
+#: (python, json) are prose
+_SH_FENCE = re.compile(r"^```sh\s*$")
+_FENCE_END = re.compile(r"^```\s*$")
 
 
 def collect(paths: list[str]) -> list[pathlib.Path]:
@@ -48,13 +63,80 @@ def check(files: list[pathlib.Path]) -> list[str]:
     return errors
 
 
-def main(argv: list[str]) -> int:
-    files = collect(argv or ["README.md", "docs"])
+def sh_commands(md: pathlib.Path) -> list[tuple[int, str]]:
+    """(lineno, command) pairs from every ```sh fenced block: comments
+    and blanks dropped, backslash continuations joined into one
+    command."""
+    out: list[tuple[int, str]] = []
+    in_sh = False
+    pending: list[str] = []
+    pending_line = 0
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if not in_sh:
+            in_sh = bool(_SH_FENCE.match(line))
+            continue
+        if _FENCE_END.match(line):
+            in_sh = False
+            pending = []
+            continue
+        stripped = line.strip()
+        if not pending and (not stripped or stripped.startswith("#")):
+            continue
+        if not pending:
+            pending_line = lineno
+        if stripped.endswith("\\"):
+            pending.append(stripped[:-1].strip())
+            continue
+        pending.append(stripped)
+        out.append((pending_line, " ".join(pending)))
+        pending = []
+    return out
+
+
+def run_commands(files: list[pathlib.Path], root: pathlib.Path) -> list[str]:
+    errors = []
+    total = 0
+    for md in files:
+        if not md.exists():
+            continue
+        for lineno, cmd in sh_commands(md):
+            total += 1
+            print(f"[exec] {md}:{lineno}: {cmd}", flush=True)
+            proc = subprocess.run(cmd, shell=True, cwd=root,
+                                  stdout=subprocess.PIPE,
+                                  stderr=subprocess.STDOUT, text=True)
+            if proc.returncode != 0:
+                tail = "\n".join(proc.stdout.splitlines()[-15:])
+                errors.append(f"{md}:{lineno}: exit {proc.returncode} "
+                              f"from: {cmd}\n{tail}")
+    print(f"executed {total} documented command(s)")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python tools/check_docs.py")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="markdown files or directories (default: "
+                         "README.md docs)")
+    ap.add_argument("--exec", dest="execute", action="store_true",
+                    help="additionally run every ```sh fenced command "
+                         "from the repo root; any nonzero exit fails")
+    args = ap.parse_args(argv)
+
+    files = collect(args.paths or ["README.md", "docs"])
     errors = check(files)
+    root = pathlib.Path(__file__).resolve().parent.parent
+    if args.execute and not errors:
+        errors += run_commands(files, root)
     for e in errors:
         print(e)
-    print(f"checked {len(files)} file(s): "
-          f"{'FAIL' if errors else 'all links resolve'}")
+    if errors:
+        status = "FAIL"
+    else:
+        status = "all links resolve"
+        if args.execute:
+            status += " + all commands ran"
+    print(f"checked {len(files)} file(s): {status}")
     return 1 if errors else 0
 
 
